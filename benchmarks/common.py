@@ -1,0 +1,56 @@
+"""Shared benchmark helpers: result tables + paper-target validation."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Optional
+
+OUT_DIR = Path(os.environ.get("REPRO_BENCH_OUT", "experiments/bench"))
+
+
+def save_result(name: str, payload: dict) -> None:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    payload = dict(payload)
+    payload["benchmark"] = name
+    payload["unix_time"] = time.time()
+    (OUT_DIR / f"{name}.json").write_text(json.dumps(payload, indent=1))
+
+
+def table(rows: List[dict], cols: List[str], title: str = "") -> str:
+    out = [f"== {title} ==" if title else ""]
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows)) for c in cols}
+    out.append("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        out.append("  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))
+    return "\n".join(out)
+
+
+@dataclass
+class Claim:
+    """A paper claim validated by a benchmark (EXPERIMENTS.md ledger)."""
+
+    figure: str
+    claim: str
+    target: float
+    achieved: float
+    direction: str = ">="  # achieved vs target comparator for 'ok'
+
+    @property
+    def ok(self) -> bool:
+        if self.direction == ">=":
+            return self.achieved >= self.target
+        if self.direction == "ordering":
+            return self.achieved > 0
+        return self.achieved <= self.target
+
+    def row(self) -> dict:
+        return {
+            "figure": self.figure,
+            "claim": self.claim,
+            "paper": self.target,
+            "achieved": round(self.achieved, 2),
+            "status": "REPRODUCED" if self.ok else "PARTIAL",
+        }

@@ -1,0 +1,48 @@
+"""Paper Fig 3b: latency microbenchmark (1 … 4096 concurrent chains)."""
+from __future__ import annotations
+
+import sys
+
+from repro.amtsim.workloads import chains
+
+from .common import Claim, save_result, table
+
+CHAINS = (1, 16, 256, 1024)
+VARIANTS = ("lci", "mpi", "mpi_a")
+
+
+def run(fast: bool = False) -> dict:
+    chain_counts = (1, 64, 256) if fast else CHAINS
+    rows = []
+    data: dict = {}
+    for size, label in ((8, "8B"), (16384, "16KiB")):
+        for v in VARIANTS:
+            lat = {}
+            for nc in chain_counts:
+                r = chains(v, msg_size=size, nchains=nc, nsteps=20, nthreads=64,
+                           max_seconds=5.0)
+                lat[nc] = r.elapsed
+            data[f"{v}_{label}"] = lat
+            rows.append({"variant": v, "size": label,
+                         **{f"c{n}": f"{lat[n]*1e6:.1f}us" for n in chain_counts}})
+    c0 = chain_counts[0]
+    cmax = chain_counts[-1]
+    claims = [
+        Claim("Fig3b", "lci 8B latency below mpi (paper up to 3x)", 1.5,
+              data["mpi_8B"][c0] / data["lci_8B"][c0]),
+        Claim("Fig3b", "lci 16KiB latency below mpi (paper up to 20x)", 1.5,
+              data["mpi_16KiB"][cmax] / data["lci_16KiB"][cmax]),
+        Claim("Fig3b", "lci sustains concurrent chains better than mpi", 1.0,
+              (data["mpi_8B"][cmax] / data["mpi_8B"][c0])
+              / max(data["lci_8B"][cmax] / data["lci_8B"][c0], 1e-9)),
+    ]
+    print(table(rows, ["variant", "size"] + [f"c{n}" for n in chain_counts], "Fig 3b latency"))
+    print(table([c.row() for c in claims], ["figure", "claim", "paper", "achieved", "status"]))
+    payload = {"latency": {k: {str(n): x for n, x in v.items()} for k, v in data.items()},
+               "claims": [c.row() for c in claims]}
+    save_result("latency", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run(fast="--fast" in sys.argv)

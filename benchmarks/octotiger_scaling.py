@@ -1,0 +1,43 @@
+"""Paper Fig 4: Octo-Tiger strong scaling (lci vs mpi vs mpi_a)."""
+from __future__ import annotations
+
+import sys
+
+from repro.amtsim.workloads import octotiger
+
+from .common import Claim, save_result, table
+
+NODES = (2, 8, 32, 128)
+
+
+def run(fast: bool = False) -> dict:
+    nodes = (2, 8, 32) if fast else NODES
+    subgrids = 2048 if not fast else 512
+    workers = 16 if not fast else 8
+    rows = []
+    data: dict = {}
+    for v in ("lci", "mpi", "mpi_a"):
+        e = {}
+        for n in nodes:
+            r = octotiger(v, n_nodes=n, workers=workers, total_subgrids=subgrids,
+                          timesteps=3, max_seconds=120.0)
+            e[n] = r.elapsed
+        data[v] = e
+        rows.append({"variant": v, **{f"n{n}": f"{e[n]*1e3:.2f}ms" for n in nodes}})
+    nmax = nodes[-1]
+    speedup_small = data["mpi"][nodes[0]] / data["lci"][nodes[0]]
+    speedup_large = data["mpi"][nmax] / data["lci"][nmax]
+    claims = [
+        Claim("Fig4", "lci/mpi speedup at max nodes (paper up to 2x)", 1.3, speedup_large),
+        Claim("Fig4", "speedup grows with node count", 1.0, speedup_large / speedup_small),
+    ]
+    print(table(rows, ["variant"] + [f"n{n}" for n in nodes], "Fig 4 Octo-Tiger strong scaling"))
+    print(table([c.row() for c in claims], ["figure", "claim", "paper", "achieved", "status"]))
+    payload = {"elapsed": {k: {str(n): x for n, x in v.items()} for k, v in data.items()},
+               "claims": [c.row() for c in claims]}
+    save_result("octotiger_scaling", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run(fast="--fast" in sys.argv)

@@ -1,0 +1,63 @@
+"""Paper Fig 1: Octo-Tiger communication profile — message timeline + size
+distribution (frequent small messages, occasional large, no phases)."""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.amtsim.costs import EXPANSE, DEFAULT_MECHANISMS
+from repro.amtsim.parcelport_sim import SimWorld, sim_config_for_variant, _Message
+from repro.amtsim.workloads import octotiger
+
+from .common import save_result, table
+
+
+def run(fast: bool = False) -> dict:
+    # instrument the injection path to capture (time, size)
+    events = []
+    orig_inject = SimWorld._inject
+
+    def spy(self, dev, msg):
+        events.append((self.env.now, msg.size))
+        return orig_inject(self, dev, msg)
+
+    SimWorld._inject = spy
+    try:
+        octotiger("lci", n_nodes=8, workers=8, total_subgrids=512, timesteps=4)
+    finally:
+        SimWorld._inject = orig_inject
+    times = np.array([t for t, _ in events])
+    sizes = np.array([s for _, s in events])
+    # (a) messages over time: rate per 10% epoch — no quiet phases
+    hist, _ = np.histogram(times, bins=10)
+    # (b) size distribution: dominated by small messages
+    small_frac = float((sizes <= 4096).mean())
+    rows = [
+        {"metric": "total messages", "value": len(events)},
+        {"metric": "small (≤4 KiB) fraction", "value": f"{small_frac:.2%}"},
+        {"metric": "p50 size", "value": int(np.percentile(sizes, 50))},
+        {"metric": "p99 size", "value": int(np.percentile(sizes, 99))},
+        {"metric": "min epoch msg count", "value": int(hist.min())},
+        {"metric": "max epoch msg count", "value": int(hist.max())},
+    ]
+    print(table(rows, ["metric", "value"], "Fig 1 Octo-Tiger communication profile"))
+    always_on = bool(hist.min() > 0.15 * hist.max())
+    print(f"claims: small-message dominated={small_frac > 0.8}, no-phases={always_on}")
+    payload = {
+        "n_messages": len(events),
+        "small_fraction": small_frac,
+        "epoch_hist": hist.tolist(),
+        "claims": [
+            {"figure": "Fig1", "claim": "small-message dominated", "paper": 0.8,
+             "achieved": round(small_frac, 3), "status": "REPRODUCED" if small_frac > 0.8 else "PARTIAL"},
+            {"figure": "Fig1", "claim": "communication has no phases", "paper": 1.0,
+             "achieved": float(always_on), "status": "REPRODUCED" if always_on else "PARTIAL"},
+        ],
+    }
+    save_result("profile_octotiger", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run(fast="--fast" in sys.argv)

@@ -1,0 +1,38 @@
+"""Framework roofline report: per (arch × shape × mesh) terms from the
+dry-run artifacts (deliverable g).  Not a paper figure — the framework's
+own §Roofline deliverable."""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+from repro.roofline import format_table, load_cells
+
+from .common import save_result, table
+
+
+def run(fast: bool = False, dry_dir: str = "experiments/dryrun") -> dict:
+    if not Path(dry_dir).exists():
+        print(f"[roofline_report] {dry_dir} missing — run the dry-run sweep first:")
+        print("  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes --remat full")
+        return {"skipped": True}
+    out = {}
+    for mesh in ("16x16", "2x16x16"):
+        cells = load_cells(dry_dir, mesh_filter=mesh)
+        if not cells:
+            continue
+        cells.sort(key=lambda c: c.roofline_fraction)
+        print(f"\n=== Roofline ({mesh}, {len(cells)} cells) ===")
+        print(format_table(cells))
+        out[mesh] = [
+            {"cell": c.cell, "compute_s": c.compute_s, "memory_s": c.memory_s,
+             "collective_s": c.collective_s, "dominant": c.dominant,
+             "flops_ratio": c.flops_ratio, "roofline_fraction": c.roofline_fraction}
+            for c in cells
+        ]
+    save_result("roofline_report", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(fast="--fast" in sys.argv)

@@ -1,0 +1,64 @@
+"""Run every benchmark (one per paper table/figure + the roofline report).
+
+``python -m benchmarks.run [--fast] [--only name1,name2]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    factor_asynchrony,
+    factor_concurrency,
+    factor_devices,
+    factor_multithreading,
+    latency,
+    message_rate,
+    octotiger_scaling,
+    profile_octotiger,
+    roofline_report,
+    slingshot,
+)
+
+BENCHMARKS = {
+    "profile_octotiger": profile_octotiger.run,  # Fig 1
+    "message_rate": message_rate.run,  # Fig 3a
+    "latency": latency.run,  # Fig 3b
+    "octotiger_scaling": octotiger_scaling.run,  # Fig 4
+    "slingshot": slingshot.run,  # Fig 5
+    "factor_asynchrony": factor_asynchrony.run,  # Fig 6
+    "factor_concurrency": factor_concurrency.run,  # Fig 7
+    "factor_multithreading": factor_multithreading.run,  # Fig 8
+    "factor_devices": factor_devices.run,  # Fig 9
+    "roofline_report": roofline_report.run,  # framework §Roofline
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = list(BENCHMARKS) if not args.only else args.only.split(",")
+    failures = []
+    n_claims = n_ok = 0
+    for name in names:
+        print(f"\n{'='*72}\n## {name}\n{'='*72}", flush=True)
+        t0 = time.time()
+        try:
+            payload = BENCHMARKS[name](fast=args.fast)
+            for c in (payload or {}).get("claims", []):
+                n_claims += 1
+                n_ok += c["status"] == "REPRODUCED"
+        except Exception:  # noqa: BLE001 - keep the suite running
+            traceback.print_exc()
+            failures.append(name)
+        print(f"[{name}: {time.time()-t0:.1f}s]", flush=True)
+    print(f"\n{'='*72}\nclaims reproduced: {n_ok}/{n_claims}; benchmark failures: {failures or 'none'}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

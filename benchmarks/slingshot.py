@@ -1,0 +1,40 @@
+"""Paper Fig 5 / §4.2.3: Expanse (IB) vs Delta (Slingshot-11 libfabric CQ lock)."""
+from __future__ import annotations
+
+import sys
+
+from repro.amtsim.costs import DELTA, EXPANSE
+from repro.amtsim.workloads import flood, octotiger
+
+from .common import Claim, save_result, table
+
+
+def run(fast: bool = False) -> dict:
+    nthreads = 32 if fast else 64
+    rows = []
+    data: dict = {}
+    for plat in (EXPANSE, DELTA):
+        rate = flood("lci", msg_size=8, nthreads=nthreads, nmsgs=4000, platform=plat).rate
+        app = octotiger("lci", n_nodes=8, workers=8, total_subgrids=512, timesteps=3,
+                        platform=plat).elapsed
+        mpi_app = octotiger("mpi", n_nodes=8, workers=8, total_subgrids=512, timesteps=3,
+                            platform=plat).elapsed
+        data[plat.name] = {"rate": rate, "octotiger": app, "octotiger_mpi": mpi_app}
+        rows.append({"platform": plat.name, "rate": f"{rate/1e6:.2f}M/s",
+                     "octotiger": f"{app*1e3:.2f}ms",
+                     "lci_vs_mpi": f"{mpi_app/app:.2f}x"})
+    claims = [
+        Claim("Fig5", "Delta peak rate below Expanse (paper ~30% lower)", 1.05,
+              data["expanse"]["rate"] / data["delta"]["rate"]),
+        Claim("§4.2.3", "lci still beats mpi on Slingshot-11 (paper 1.2-3x)", 1.2,
+              data["delta"]["octotiger_mpi"] / data["delta"]["octotiger"]),
+    ]
+    print(table(rows, ["platform", "rate", "octotiger", "lci_vs_mpi"], "Fig 5 IB vs Slingshot-11"))
+    print(table([c.row() for c in claims], ["figure", "claim", "paper", "achieved", "status"]))
+    payload = {"data": data, "claims": [c.row() for c in claims]}
+    save_result("slingshot", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run(fast="--fast" in sys.argv)

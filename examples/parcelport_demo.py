@@ -1,0 +1,38 @@
+"""The paper's factor study, live: run the same workload over parcelport
+variants and watch the four communication needs show up as throughput.
+
+Run:  PYTHONPATH=src python examples/parcelport_demo.py
+"""
+import time
+
+from repro.amtsim.workloads import flood, octotiger
+
+LADDER = [
+    ("mpi", "MPI parcelport: big lock, request pool, implicit progress"),
+    ("block", "LCI mimicking MPI: coarse blocking lock"),
+    ("try", "…replace blocking lock with try lock"),
+    ("try_progress", "…add explicit frequent progress"),
+    ("block_d2", "…or instead replicate devices (2)"),
+    ("lci", "full LCI: lock-free + queues + put + explicit progress"),
+]
+
+
+def main() -> int:
+    print("paper §5.3 ladder — 8 B message rate (64 threads) and Octo-Tiger time\n")
+    base_app = None
+    for variant, desc in LADDER:
+        t0 = time.time()
+        rate = flood(variant, msg_size=8, nthreads=64, nmsgs=3000).rate
+        app = octotiger(variant, n_nodes=8, workers=8, total_subgrids=512, timesteps=3).elapsed
+        base_app = base_app or app
+        print(
+            f"{variant:13s} {rate/1e6:6.2f} M msg/s   octotiger {app*1e3:7.2f} ms "
+            f"({base_app/app:4.2f}x vs mpi)   [{desc}]"
+        )
+    print("\nobservation: each technique addresses thread contention somewhere —")
+    print("the paper's conclusion is that contention is the crucial factor.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,54 @@
+"""Continuous-batching serving demo: multithreaded clients, slot scheduler,
+greedy decode — the serving-side end-to-end driver.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--arch zamba2-1.2b]
+"""
+import argparse
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serve import InferenceServer, ServeConfig
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--max-new", type=int, default=10)
+    args = ap.parse_args()
+
+    arch = get_smoke_config(args.arch)
+    params = init_params(jax.random.PRNGKey(0), arch)
+    server = InferenceServer(arch, params, ServeConfig(slots=4, context=128))
+    rng = np.random.default_rng(0)
+    reqs = []
+
+    def client(i):
+        prompt = rng.integers(0, arch.vocab_size, size=8 + i % 5).tolist()
+        reqs.append(server.submit(prompt, max_new=args.max_new))
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(args.requests)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    server.run_until_idle()
+    dt = time.monotonic() - t0
+    for r in reqs[:3]:
+        print(f"req {r.rid}: {len(r.out_tokens)} tokens → {r.out_tokens[:8]}…")
+    print(
+        f"\n{len(reqs)} requests / {server.steps} engine steps / "
+        f"{server.tokens_out} tokens in {dt:.1f}s ({server.tokens_out/dt:.1f} tok/s); "
+        f"batched decode slots shared by all requests (continuous batching)"
+    )
+    return 0 if all(r.done_event.is_set() for r in reqs) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,633 @@
+"""Discrete-event model of the HPX parcelport stack (quantitative repro).
+
+The functional layer (:mod:`repro.core`) proves the *interfaces*; this layer
+carries the *performance* claims, which a 1-core GIL-bound container cannot
+measure in wall time.  Every mechanism the paper varies is modeled with a
+calibrated cost (:mod:`repro.amtsim.costs`) on a discrete-event kernel
+(:mod:`repro.amtsim.des`):
+
+* worker threads are DES processes — they genuinely overlap in simulated
+  time except where locks serialize them, reproducing the paper's central
+  contention dynamics (§5.3);
+* coarse locks additionally charge a **contention penalty per waiter**
+  (cache-line bouncing / futex cost — the paper's "most crucial factor");
+* devices are injection channels: a message occupies its device for
+  ``max(inj_overhead, bytes/bandwidth)`` and lands in the destination
+  device's completion queue after ``wire_latency``;
+* completion queues (LCRQ/MS/lock), synchronizer pools, tag matching,
+  MPI_Test-only implicit progress, parcel aggregation, and the
+  Slingshot-11 libfabric CQ lock (§4.2.3) are explicit costs or DES locks.
+
+Follow-up (zero-copy) chunks use a rendezvous: the receiver processes the
+header, allocates buffers, posts the receive, and only then does the wire
+carry the payload — the same extra round both real parcelports pay for
+unexpected large transfers, applied to both families equally.
+
+Variant names match :mod:`repro.core.variants`, so benchmarks sweep the same
+configuration space as the paper's Figs 3-9.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
+
+from ..core.device import LockMode
+from ..core.lci_parcelport import LCIPPConfig
+from ..core.variants import VARIANTS
+from .costs import DEFAULT_MECHANISMS, EXPANSE, Mechanisms, Platform
+from .des import Acquire, Env, Lock, Store, Timeout
+
+__all__ = ["SimWorld", "SimConfig", "Task", "sim_config_for_variant", "HEADER_BYTES", "PIGGYBACK_LIMIT"]
+
+HEADER_BYTES = 64
+PIGGYBACK_LIMIT = 8192  # nzc chunks up to this ride on the header (paper §4.2.2)
+
+
+@dataclass
+class SimConfig:
+    """Variant knobs (mirrors LCIPPConfig) + which library family it is."""
+
+    name: str = "lci"
+    mpi: bool = False
+    aggregation: bool = False
+    header_mode: str = "put"  # 'put' | 'sendrecv'
+    header_comp: str = "queue"  # 'queue' | 'sync'
+    followup_comp: str = "queue"  # 'queue' | 'sync'
+    cq_kind: str = "lcrq"
+    ndevices: int = 2
+    lock_mode: str = LockMode.NONE
+    progress_mode: str = "explicit"  # 'explicit' | 'implicit'
+    # paper §3.3.4's omitted experiment: reserve n cores that ONLY drive
+    # the progress engine (never execute tasks)
+    progress_workers: int = 0
+
+
+def sim_config_for_variant(name: str) -> SimConfig:
+    """Translate a :mod:`repro.core.variants` name into a SimConfig."""
+    if name == "mpi":
+        return SimConfig(name="mpi", mpi=True, ndevices=1, lock_mode=LockMode.BLOCK)
+    if name == "mpi_a":
+        return SimConfig(name="mpi_a", mpi=True, aggregation=True, ndevices=1, lock_mode=LockMode.BLOCK)
+    cfg: LCIPPConfig = VARIANTS[name]
+    return SimConfig(
+        name=name,
+        aggregation=cfg.aggregation,
+        header_mode=cfg.header_mode,
+        header_comp=cfg.header_comp,
+        followup_comp=cfg.followup_comp,
+        cq_kind=cfg.cq_kind,
+        ndevices=cfg.ndevices,
+        lock_mode=cfg.lock_mode,
+        progress_mode=cfg.progress_mode,
+    )
+
+
+@dataclass
+class Task:
+    """An AMT task: optional compute burn, then an action callback.
+
+    ``action(worker)`` may return a generator, in which case the worker
+    executes it inline (it can yield DES commands, e.g. to send parcels).
+    """
+
+    compute: float = 0.0
+    action: Optional[Callable[["SimWorker"], Any]] = None
+
+
+@dataclass
+class _Message:
+    kind: str  # 'header' | 'followup'
+    size: int
+    parcel: "ParcelOp"
+
+
+@dataclass
+class _MPIReq:
+    """One MPI_Request in the parcelport's shared pool (§3.3.2): completion
+    is only *noticed* when this request's turn comes up in the round-robin
+    single-request MPI_Test."""
+
+    kind: str  # 'send' | 'recv'
+    op: "ParcelOp"
+    done: bool = False
+
+
+@dataclass
+class ParcelOp:
+    """One in-flight parcel (or aggregate of parcels)."""
+
+    src: int
+    dst: int
+    size: int  # piggyback-eligible payload bytes
+    on_delivered: Optional[Callable[[], None]] = None
+    send_time: float = 0.0
+    nparcels: int = 1
+    # zero-copy chunks transfer *sequentially* (paper §3.2: the receiver
+    # starts receiving a new chunk only after the prior one completed)
+    followup_chunks: List[int] = None  # type: ignore[assignment]
+    chunk_idx: int = 0
+    src_dev_idx: int = 0
+    total_app_bytes: int = 0
+    mpi_recv_req: Any = None  # the in-flight follow-up _MPIReq (MPI path)
+
+    def __post_init__(self) -> None:
+        if self.followup_chunks is None:
+            self.followup_chunks = []
+
+
+class _SimDevice:
+    """One set of communication resources: injection channel + hardware CQ."""
+
+    __slots__ = ("env", "rank", "index", "inj_lock", "coarse", "cq", "stats_injected")
+
+    def __init__(self, env: Env, rank: "SimRank", index: int):
+        self.env = env
+        self.rank = rank
+        self.index = index
+        self.inj_lock = Lock(env)  # fine-grained send-queue lock (always present)
+        self.coarse = Lock(env)  # coarse library lock (block/try variants)
+        self.cq: List[Tuple[str, _Message]] = []
+        self.stats_injected = 0
+
+
+class SimRank:
+    """One locality: devices, run queue, completion structures."""
+
+    def __init__(self, world: "SimWorld", rank: int):
+        self.world = world
+        self.env = world.env
+        self.rank = rank
+        cfg = world.cfg
+        self.devices = [_SimDevice(self.env, self, i) for i in range(cfg.ndevices)]
+        self.runq: Store = Store(self.env)  # scheduler run queue
+        self.wire_busy_until = 0.0  # shared NIC wire: bandwidth is per rank
+        self.cq_accessors = 0  # concurrent LCI-CQ users (contention penalty)
+        self.pool_lock = Lock(self.env)  # MPI request pool / synchronizer pool
+        # two-sided receive path: "only one thread can proceed along the
+        # code path from tag matching to completion signaling" (§3.3.1)
+        self.match_lock = Lock(self.env)
+        self.lf_lock = Lock(self.env)  # Slingshot-11 libfabric CQ lock (§4.2.3)
+        self.agg_queues: Dict[int, List[ParcelOp]] = {}
+        self.agg_draining: Dict[int, bool] = {}
+        self.agg_lock = Lock(self.env)
+        self.handled = 0
+        self.sent = 0
+        # --- MPI request-pool state (§3.3.2) ---
+        # one pre-posted any-source header recv at a time (§3.3.1)
+        self.mpi_header_req: Optional[_Message] = None  # completed header, if any
+        self.mpi_header_backlog: List[_Message] = []  # unexpected headers
+        self.mpi_pool: List["_MPIReq"] = []  # shared request pool, round-robin
+
+    def device_for_worker(self, wid: int) -> _SimDevice:
+        return self.devices[wid % len(self.devices)]
+
+
+class SimWorker:
+    """One HPX worker thread (a DES process)."""
+
+    __slots__ = ("rank", "wid", "env", "executed")
+
+    def __init__(self, rank: SimRank, wid: int):
+        self.rank = rank
+        self.wid = wid
+        self.env = rank.env
+        self.executed = 0
+
+    def run(self) -> Generator:
+        world = self.rank.world
+        base_sleep = 0.3e-6
+        idle_streak = 0
+        tasks_since_bg = 0
+        while not world.stopped:
+            task = self.rank.runq.get_nowait()
+            if task is not None:
+                idle_streak = 0
+                if task.compute > 0:
+                    yield Timeout(task.compute)
+                if task.action is not None:
+                    r = task.action(self)
+                    if r is not None:
+                        yield from r
+                self.executed += 1
+                tasks_since_bg += 1
+                if tasks_since_bg >= world.bg_interval_tasks:
+                    # HPX schedules parcelport background work periodically
+                    # even under load, not only on idle cores
+                    tasks_since_bg = 0
+                    yield from world.background_work(self)
+                continue
+            tasks_since_bg = 0
+            progressed = yield from world.background_work(self)
+            if progressed:
+                idle_streak = 0
+            else:
+                # exponential backoff caps DES event volume; progress
+                # frequency stays high while traffic flows
+                idle_streak += 1
+                yield Timeout(min(base_sleep * (1 + idle_streak // 8), 3e-6))
+
+
+class SimWorld:
+    """The simulated cluster running one parcelport variant."""
+
+    def __init__(
+        self,
+        n_ranks: int,
+        workers_per_rank: int,
+        cfg: SimConfig,
+        platform: Platform = EXPANSE,
+        mech: Mechanisms = DEFAULT_MECHANISMS,
+        bg_interval_tasks: int = 8,
+    ):
+        self.env = Env()
+        self.cfg = cfg
+        self.platform = platform
+        self.mech = mech
+        self.bg_interval_tasks = bg_interval_tasks
+        self.ranks = [SimRank(self, r) for r in range(n_ranks)]
+        self.workers: List[SimWorker] = []
+        self.stopped = False
+        self.msg_count = 0
+        self.byte_count = 0
+        for r in self.ranks:
+            for w in range(workers_per_rank):
+                wk = SimWorker(r, w)
+                self.workers.append(wk)
+                if w < cfg.progress_workers:
+                    self.env.process(self._progress_worker(wk))
+                else:
+                    self.env.process(wk.run())
+
+    def _progress_worker(self, wk: SimWorker) -> Generator:
+        """A core dedicated to the progress engine (paper §3.3.4 option)."""
+        while not self.stopped:
+            progressed = yield from self.background_work(wk)
+            if not progressed:
+                yield Timeout(0.3e-6)
+
+    # --------------------------------------------------------------- helpers
+    def _lock_with_contention(self, lock: Lock) -> Generator:
+        """Blocking acquire + per-waiter contention penalty (cache-line
+        bouncing / futex wake cost grows with the number of contenders)."""
+        waiters = len(lock._waiters) + (1 if lock.held else 0)
+        yield Acquire(lock)
+        penalty = self.mech.t_lock_contention * min(waiters, 32)
+        yield Timeout(self.mech.t_lock_uncontended + penalty)
+
+    # ------------------------------------------------------------------ send
+    def send_parcel(self, worker: SimWorker, op: ParcelOp) -> Generator:
+        """Worker-side send path (generator: burns worker time)."""
+        mech, cfg = self.mech, self.cfg
+        rank = self.ranks[op.src]
+        op.send_time = self.env.now
+        op.total_app_bytes = op.size
+        if not cfg.aggregation:
+            yield from self._send_one(worker, op)
+            return
+        # HPX parcel aggregation (paper §2.2.2): enqueue, then drain unless
+        # another worker's drain is already in flight for this destination.
+        # The per-destination parcel queue is itself a point of thread
+        # contention (§4.2: "additional thread contention on the parcel
+        # queues") — the enqueue cost is paid inside the critical section.
+        yield Acquire(rank.agg_lock)
+        yield Timeout(mech.t_aggregate)
+        q = rank.agg_queues.setdefault(op.dst, [])
+        q.append(op)
+        if rank.agg_draining.get(op.dst):
+            rank.agg_lock.release()
+            return  # an in-progress drain cycle will pick this parcel up
+        rank.agg_draining[op.dst] = True
+        while q:
+            drained = list(q)
+            q.clear()
+            rank.agg_lock.release()
+            yield from self._send_aggregate(worker, drained)
+            yield Acquire(rank.agg_lock)
+        rank.agg_draining[op.dst] = False
+        rank.agg_lock.release()
+
+    def _send_aggregate(self, worker: SimWorker, ops: List[ParcelOp]) -> Generator:
+        """Small (piggyback-eligible) parts merge into one nzc chunk;
+        zero-copy chunks cannot merge (paper §4.2.2) and stay follow-ups."""
+        first = ops[0]
+        small = sum(op.size for op in ops if op.size <= PIGGYBACK_LIMIT)
+        big = [op.size for op in ops if op.size > PIGGYBACK_LIMIT]
+        agg = ParcelOp(src=first.src, dst=first.dst, size=small, nparcels=len(ops))
+        agg.send_time = min(op.send_time for op in ops)
+        agg.followup_chunks = big  # zc chunks cannot merge — stay separate
+        agg.total_app_bytes = small + sum(big)
+        cbs = [op.on_delivered for op in ops if op.on_delivered]
+
+        def deliver_all() -> None:
+            for cb in cbs:
+                cb()
+
+        agg.on_delivered = deliver_all
+        # serialization/merge cost is proportional to merged bytes
+        yield Timeout(self.mech.t_serialize_per_byte * small)
+        yield from self._send_one(worker, agg)
+
+    def _send_one(self, worker: SimWorker, op: ParcelOp) -> Generator:
+        mech, cfg = self.mech, self.cfg
+        dev = self.ranks[op.src].device_for_worker(worker.wid)
+        op.src_dev_idx = dev.index
+        if op.size > PIGGYBACK_LIMIT:
+            op.followup_chunks = [op.size] + op.followup_chunks
+            piggy = 0
+        else:
+            piggy = op.size
+        # Lock discipline.  Sends take the coarse lock *blocking* even in the
+        # 'try' variants — paper footnote 1: only progress can use try locks.
+        locked = cfg.mpi or cfg.lock_mode in (LockMode.BLOCK, LockMode.TRY)
+        if locked:
+            yield from self._lock_with_contention(dev.coarse)
+            if cfg.mpi:
+                yield Timeout(mech.t_mpi_big_lock)
+        yield Timeout(mech.t_post_send)
+        yield from self._inject(dev, _Message("header", HEADER_BYTES + piggy, op))
+        if locked:
+            dev.coarse.release()
+        if cfg.mpi:
+            # the send request joins the shared pool; a background_work must
+            # round-robin to it before its buffers are released (§3.3.2)
+            self.ranks[op.src].mpi_pool.append(_MPIReq("send", op, done=True))
+        self.ranks[op.src].sent += op.nparcels
+
+    def _inject(self, dev: _SimDevice, msg: _Message) -> Generator:
+        """Occupy the injection channel (per-device descriptor/doorbell
+        cost), queue the payload on the rank's shared wire (bandwidth is a
+        per-NIC resource even with many devices), schedule the arrival."""
+        plat = self.platform
+        rank = dev.rank
+        yield Acquire(dev.inj_lock)
+        yield Timeout(plat.inj_overhead)
+        dev.inj_lock.release()
+        dev.stats_injected += 1
+        self.msg_count += 1
+        self.byte_count += msg.size
+        # shared-wire DMA: the worker does not wait, the wire serializes
+        now = self.env.now
+        start = max(now, rank.wire_busy_until)
+        done = start + msg.size / plat.bandwidth
+        rank.wire_busy_until = done
+        dst_rank = self.ranks[msg.parcel.dst]
+        dst_dev = dst_rank.devices[msg.parcel.src_dev_idx % len(dst_rank.devices)]
+        self.env.process(self._arrive_later(dst_dev, msg, done - now + plat.wire_latency))
+
+    def _arrive_later(self, dst_dev: _SimDevice, msg: _Message, delay: float) -> Generator:
+        yield Timeout(delay)
+        dst_dev.cq.append((msg.kind, msg))
+
+    # -------------------------------------------------------------- progress
+    def background_work(self, worker: SimWorker) -> Generator:
+        if self.cfg.mpi:
+            return (yield from self._mpi_background_work(worker))
+        return (yield from self._lci_background_work(worker))
+
+    def _lci_background_work(self, worker: SimWorker) -> Generator:
+        mech, cfg = self.mech, self.cfg
+        dev = worker.rank.device_for_worker(worker.wid)
+        # client-side completion poll (queue pop is cheap; sync pool = MPI-ish)
+        yield from self._poll_completion_objects(worker)
+        if cfg.progress_mode == "implicit":
+            # progress only rides on a failed completion test (MPI behaviour):
+            # charge one test and fall through to the engine at reduced rate.
+            yield Timeout(mech.t_sync_test)
+        # progress engine invocation, per lock discipline (§5.3)
+        if cfg.lock_mode == LockMode.BLOCK:
+            yield from self._lock_with_contention(dev.coarse)
+        elif cfg.lock_mode == LockMode.TRY:
+            if not dev.coarse.try_acquire():
+                yield Timeout(mech.t_try_fail)
+                return False
+        moved = yield from self._progress_device(worker, dev)
+        if cfg.lock_mode in (LockMode.BLOCK, LockMode.TRY):
+            dev.coarse.release()
+        return moved
+
+    def _progress_device(self, worker: SimWorker, dev: _SimDevice) -> Generator:
+        """Poll one device's hardware CQ; handle completions."""
+        mech, plat = self.mech, self.platform
+        if plat.libfabric_cq_lock:
+            # Slingshot-11: libfabric serializes CQ polling on a spin lock —
+            # 85% of Octo-Tiger time on Delta/32 nodes (paper §4.2.3).
+            yield from self._lock_with_contention(worker.rank.lf_lock)
+            yield Timeout(plat.progress_lock_cost)
+        yield Timeout(mech.t_progress_poll)
+        moved = False
+        for _ in range(16):
+            if not dev.cq:
+                break
+            kind, msg = dev.cq.pop(0)
+            moved = True
+            yield Timeout(mech.t_per_completion)
+            yield from self._handle_completion(worker, dev, kind, msg)
+        if plat.libfabric_cq_lock:
+            worker.rank.lf_lock.release()
+        return moved
+
+    def _handle_completion(self, worker: SimWorker, dev: _SimDevice, kind: str, msg: _Message) -> Generator:
+        mech, cfg = self.mech, self.cfg
+        op = msg.parcel
+        rank = worker.rank
+        if kind == "header":
+            if cfg.header_mode == "put":
+                # dynamic put: no matching; buffer goes straight to the client
+                yield Timeout(mech.t_put_deliver)
+                yield from self._cq_cost(rank, "push")
+                yield from self._cq_cost(rank, "pop")
+            else:
+                # two-sided: the matching→signaling path is a sequential
+                # bottleneck (§3.3.1) — serialized, but with no futex storm
+                yield Acquire(rank.match_lock)
+                yield Timeout(mech.t_tag_match + mech.t_post_recv)  # match + re-post
+                if cfg.header_comp == "sync":
+                    # one pre-posted receive at a time; cheap 4 B signal
+                    yield Timeout(mech.t_sync_signal + mech.t_sync_test)
+                else:
+                    yield from self._cq_cost(rank, "push")
+                    yield from self._cq_cost(rank, "pop")
+                rank.match_lock.release()
+            if op.followup_chunks:
+                # rendezvous: allocate zc buffers, post the receive for the
+                # *first* chunk, then the sender streams it (chunks of one
+                # parcel are strictly sequential, §3.2)
+                yield Timeout(mech.t_post_recv)
+                self._spawn_followup(op)
+            else:
+                yield from self._deliver(worker, op)
+        else:  # followup chunk op.chunk_idx completed at the receiver
+            yield Timeout(mech.t_tag_match)
+            if cfg.followup_comp == "sync":
+                # request-pool detection: the completion is only *noticed*
+                # by round-robin testing under the pool try-lock (§3.3.2) —
+                # serialized, with the wasted tests on not-yet-ready
+                # requests (~pool length/2 per detection) amortized in
+                yield Acquire(rank.pool_lock)
+                yield Timeout(mech.t_sync_signal + 32 * mech.t_sync_test)
+                rank.pool_lock.release()
+            else:
+                yield from self._cq_cost(rank, "push")
+                yield from self._cq_cost(rank, "pop")
+            op.chunk_idx += 1
+            if op.chunk_idx < len(op.followup_chunks):
+                yield Timeout(mech.t_post_recv)
+                self._spawn_followup(op)
+            else:
+                yield from self._deliver(worker, op)
+
+    def _spawn_followup(self, op: ParcelOp) -> None:
+        if self.cfg.mpi:
+            # MPI large-message rendezvous, progress-gated at every step
+            # (§3.3.2/§3.3.4): the sender notices the prior chunk's send
+            # completion through its round-robin pool ('followup_gate'),
+            # sends RTS; the receiver's progress engine matches it and
+            # answers CTS ('cts_gate' on the receiver pool); only then does
+            # the data move.  Every hop costs a serialized MPI_Test slot.
+            self.ranks[op.src].mpi_pool.append(_MPIReq("followup_gate", op, done=True))
+            return
+        sdev = self.ranks[op.src].devices[op.src_dev_idx % self.cfg.ndevices]
+        self.env.process(self._send_followup(sdev, op))
+
+    def _mpi_rts(self, op: ParcelOp) -> Generator:
+        """RTS wire hop, then the CTS gate joins the receiver's pool."""
+        yield Timeout(self.platform.wire_latency)
+        self.ranks[op.dst].mpi_pool.append(_MPIReq("cts_gate", op, done=True))
+
+    def _mpi_cts(self, op: ParcelOp) -> Generator:
+        """CTS wire hop, then the sender's NIC streams the chunk."""
+        yield Timeout(self.platform.wire_latency)
+        sdev = self.ranks[op.src].devices[0]
+        yield from self._send_followup(sdev, op)
+
+    def _send_followup(self, sdev: _SimDevice, op: ParcelOp) -> Generator:
+        yield Timeout(self.mech.t_post_send)
+        yield from self._inject(sdev, _Message("followup", op.followup_chunks[op.chunk_idx], op))
+
+    def _deliver(self, worker: SimWorker, op: ParcelOp) -> Generator:
+        """handle_parcel: deserialize + hand the task(s) to the scheduler."""
+        mech = self.mech
+        yield Timeout(mech.t_handle_parcel * op.nparcels + mech.t_serialize_per_byte * op.total_app_bytes)
+        worker.rank.handled += op.nparcels
+        if op.on_delivered is not None:
+            op.on_delivered()
+
+    def _cq_cost(self, rank: SimRank, what: str) -> Generator:
+        """LCI completion-queue op cost + concurrency penalty (§5.2)."""
+        mech, kind = self.mech, self.cfg.cq_kind
+        base = (mech.t_cq_push if what == "push" else mech.t_cq_pop)[kind]
+        rank.cq_accessors += 1
+        penalty = mech.cq_contention[kind] * max(0, rank.cq_accessors - 1)
+        yield Timeout(base + penalty)
+        rank.cq_accessors -= 1
+
+    def _poll_completion_objects(self, worker: SimWorker) -> Generator:
+        mech, cfg = self.mech, self.cfg
+        if cfg.followup_comp == "queue":
+            yield from self._cq_cost(worker.rank, "pop")
+            return
+        # synchronizer pool: try-lock + one round-robin test (§3.3.2)
+        if not worker.rank.pool_lock.try_acquire():
+            yield Timeout(mech.t_try_fail)
+            return
+        yield Timeout(mech.t_sync_test)
+        worker.rank.pool_lock.release()
+
+    # ------------------------------------------------------- MPI parcelport
+    def _mpi_background_work(self, worker: SimWorker) -> Generator:
+        """The MPI parcelport's background_work (§3.3):
+
+        * try-lock around the shared request pool (concurrent testing of a
+          shared request is disallowed, MPI 4.1 §12.6.2);
+        * every MPI call runs under the library big lock;
+        * the progress engine runs only as a side effect of MPI_Test — the
+          hardware CQ is drained into MPI-internal completion state;
+        * completion of a specific request is *noticed* only when that
+          request is tested: the pre-posted any-source header recv (one at
+          a time, §3.3.1) plus ONE pool request per call, round-robin.
+        """
+        mech = self.mech
+        rank = worker.rank
+        dev = rank.devices[0]
+        if not rank.pool_lock.try_acquire():
+            yield Timeout(mech.t_try_fail)
+            return False
+        yield from self._lock_with_contention(dev.coarse)  # MPI big lock
+        # implicit progress: drain hardware arrivals into MPI-internal state
+        while dev.cq:
+            kind, msg = dev.cq.pop(0)
+            yield Timeout(mech.t_per_completion)
+            if kind == "header":
+                if rank.mpi_header_req is None:
+                    rank.mpi_header_req = msg  # matches the pre-posted recv
+                else:
+                    rank.mpi_header_backlog.append(msg)  # unexpected queue
+            else:
+                msg.parcel.mpi_recv_req.done = True
+        moved = False
+        to_deliver: List[ParcelOp] = []
+        # test the pre-posted any-source header request
+        yield Timeout(mech.t_mpi_test)
+        if rank.mpi_header_req is not None:
+            msg = rank.mpi_header_req
+            yield Timeout(mech.t_tag_match + mech.t_post_recv)  # match + re-post
+            rank.mpi_header_req = (
+                rank.mpi_header_backlog.pop(0) if rank.mpi_header_backlog else None
+            )
+            op = msg.parcel
+            moved = True
+            if op.followup_chunks:
+                req = _MPIReq("recv", op)
+                op.mpi_recv_req = req
+                rank.mpi_pool.append(req)
+                yield Timeout(mech.t_post_recv)
+                self._spawn_followup(op)
+            else:
+                to_deliver.append(op)
+        # test ONE request from the shared pool, round-robin (§3.3.2)
+        yield Timeout(mech.t_mpi_test)
+        if rank.mpi_pool:
+            req = rank.mpi_pool.pop(0)
+            if not req.done:
+                rank.mpi_pool.append(req)
+            else:
+                moved = True
+                if req.kind == "followup_gate":
+                    self.env.process(self._mpi_rts(req.op))
+                elif req.kind == "cts_gate":
+                    self.env.process(self._mpi_cts(req.op))
+                elif req.kind == "recv":
+                    op = req.op
+                    op.chunk_idx += 1
+                    if op.chunk_idx < len(op.followup_chunks):
+                        nreq = _MPIReq("recv", op)
+                        op.mpi_recv_req = nreq
+                        rank.mpi_pool.append(nreq)
+                        yield Timeout(mech.t_post_recv)
+                        self._spawn_followup(op)
+                    else:
+                        to_deliver.append(op)
+        dev.coarse.release()
+        rank.pool_lock.release()
+        for op in to_deliver:  # handle_parcel runs outside the library
+            yield from self._deliver(worker, op)
+        return moved
+
+    # ------------------------------------------------------------------ API
+    def spawn(self, rank: int, task: Task) -> None:
+        self.ranks[rank].runq.put(task)
+
+    def make_parcel(
+        self,
+        src: int,
+        dst: int,
+        size: int,
+        on_delivered: Optional[Callable[[], None]] = None,
+    ) -> ParcelOp:
+        return ParcelOp(src=src, dst=dst, size=size, on_delivered=on_delivered)
+
+    def run(self, until: float = float("inf"), max_events: int = 50_000_000) -> None:
+        self.env.run(until=until, max_events=max_events)
+
+    def stop(self) -> None:
+        self.stopped = True

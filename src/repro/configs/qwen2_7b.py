@@ -1,0 +1,27 @@
+"""Qwen2-7B — dense GQA with QKV bias [arXiv:2407.10671; hf]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-7b",
+    family="dense",
+    source="[arXiv:2407.10671; hf]",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1e6,
+    attn_kind="full",
+)
+
+SMOKE = CONFIG.variant(
+    name="qwen2-7b-smoke",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=256,
+)

@@ -1,0 +1,58 @@
+"""repro.core — the paper's contribution: the HPX/LCI communication stack.
+
+Layers (bottom-up, mirroring paper Fig 2):
+
+* :mod:`repro.core.fabric` — native network layer (libibverbs semantics).
+* :mod:`repro.core.device`, :mod:`repro.core.completion` — the
+  communication-library layer (LCI): devices, completion objects, progress.
+* :mod:`repro.core.mpi_sim` — MPI emulation with its interface limitations.
+* :mod:`repro.core.parcelport`, :mod:`repro.core.mpi_parcelport`,
+  :mod:`repro.core.lci_parcelport`, :mod:`repro.core.variants` — the HPX
+  adaptation layer and the paper's studied configurations.
+* :mod:`repro.core.executor` — the AMT worker runtime (HPX threads).
+"""
+from .completion import (
+    LCRQueue,
+    LockQueue,
+    MichaelScottQueue,
+    Synchronizer,
+    SynchronizerPool,
+    make_completion_queue,
+)
+from .device import LCIDevice, LockMode
+from .executor import AMTExecutor, TaskFuture
+from .fabric import Fabric, NetDevice
+from .lci_parcelport import LCIParcelport, LCIPPConfig
+from .mpi_parcelport import MPIParcelport
+from .parcel import Chunk, Parcel, deserialize_action, serialize_action
+from .parcelport import Locality, Parcelport, World
+from .variants import VARIANTS, make_parcelport_factory, max_devices, variant_names
+
+__all__ = [
+    "AMTExecutor",
+    "Chunk",
+    "Fabric",
+    "LCIDevice",
+    "LCIParcelport",
+    "LCIPPConfig",
+    "LCRQueue",
+    "LockMode",
+    "LockQueue",
+    "Locality",
+    "MPIParcelport",
+    "MichaelScottQueue",
+    "NetDevice",
+    "Parcel",
+    "Parcelport",
+    "Synchronizer",
+    "SynchronizerPool",
+    "TaskFuture",
+    "VARIANTS",
+    "World",
+    "deserialize_action",
+    "make_completion_queue",
+    "make_parcelport_factory",
+    "max_devices",
+    "serialize_action",
+    "variant_names",
+]

@@ -1,0 +1,158 @@
+"""The AMT worker-thread executor (the HPX runtime analogue, paper §2.2.2).
+
+Worker threads execute tasks from per-worker deques (LIFO locally, FIFO
+steals — standard work-stealing) and, when idle, call the parcelport's
+``background_work`` — exactly the integration contract of Listing 2.
+
+The training/serving framework uses this executor for all host-side
+asynchronous work (checkpoint shard writes, data prefetch, metric sinks),
+making the framework itself an asynchronous many-task consumer of the
+communication runtime, per the paper's model.  Work stealing doubles as the
+host-level straggler mitigation: a slow worker's queue is drained by its
+peers.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, List, Optional
+
+from .worker import set_worker_id
+
+__all__ = ["AMTExecutor", "TaskFuture"]
+
+
+class TaskFuture:
+    """Minimal future: set once, readable from any thread."""
+
+    __slots__ = ("_event", "_value", "_error")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._value: Any = None
+        self._error: Optional[BaseException] = None
+
+    def set(self, value: Any) -> None:
+        self._value = value
+        self._event.set()
+
+    def set_error(self, err: BaseException) -> None:
+        self._error = err
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        if not self._event.wait(timeout):
+            raise TimeoutError("task not finished")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+class _WorkerState:
+    __slots__ = ("deque", "lock", "steals", "executed")
+
+    def __init__(self):
+        self.deque: deque = deque()
+        self.lock = threading.Lock()
+        self.steals = 0
+        self.executed = 0
+
+
+class AMTExecutor:
+    """Work-stealing thread pool with parcelport background-work pumping."""
+
+    def __init__(
+        self,
+        n_workers: int = 2,
+        background_work: Optional[Callable[[], bool]] = None,
+        idle_sleep: float = 50e-6,
+        name: str = "amt",
+    ):
+        self.n_workers = n_workers
+        self.background_work = background_work
+        self.idle_sleep = idle_sleep
+        self._states = [_WorkerState() for _ in range(n_workers)]
+        self._stop = threading.Event()
+        self._submit_rr = 0
+        self._threads: List[threading.Thread] = []
+        for w in range(n_workers):
+            t = threading.Thread(target=self._run, args=(w,), name=f"{name}-w{w}", daemon=True)
+            self._threads.append(t)
+            t.start()
+
+    # ------------------------------------------------------------------ API
+    def submit(self, fn: Callable[..., Any], *args: Any, worker: Optional[int] = None) -> TaskFuture:
+        fut = TaskFuture()
+        w = worker if worker is not None else self._submit_rr % self.n_workers
+        self._submit_rr += 1
+        st = self._states[w]
+        with st.lock:
+            st.deque.append((fn, args, fut))
+        return fut
+
+    def progress(self) -> bool:
+        """Explicit progress from the caller thread (paper §3.3.4 applied to
+        host work: the train loop pumps this once per step)."""
+        if self.background_work is not None:
+            return self.background_work()
+        return False
+
+    def pending(self) -> int:
+        return sum(len(s.deque) for s in self._states)
+
+    def shutdown(self, wait: bool = True) -> None:
+        self._stop.set()
+        if wait:
+            for t in self._threads:
+                t.join(timeout=5.0)
+
+    def stats(self) -> dict:
+        return {
+            "executed": [s.executed for s in self._states],
+            "steals": [s.steals for s in self._states],
+        }
+
+    # ------------------------------------------------------------- internals
+    def _pop_local(self, w: int):
+        st = self._states[w]
+        with st.lock:
+            if st.deque:
+                return st.deque.pop()  # LIFO: cache-warm own tasks
+        return None
+
+    def _steal(self, w: int):
+        n = self.n_workers
+        for k in range(1, n):
+            victim = self._states[(w + k) % n]
+            with victim.lock:
+                if victim.deque:
+                    self._states[w].steals += 1
+                    return victim.deque.popleft()  # FIFO steal
+        return None
+
+    def _run(self, w: int) -> None:
+        set_worker_id(w)
+        st = self._states[w]
+        while not self._stop.is_set():
+            task = self._pop_local(w) or self._steal(w)
+            if task is not None:
+                fn, args, fut = task
+                try:
+                    fut.set(fn(*args))
+                except BaseException as e:  # noqa: BLE001 - report via future
+                    fut.set_error(e)
+                st.executed += 1
+                continue
+            # Idle: pump the communication runtime (Listing 2 contract).
+            progressed = False
+            if self.background_work is not None:
+                try:
+                    progressed = self.background_work()
+                except BaseException:
+                    pass
+            if not progressed:
+                time.sleep(self.idle_sleep)

@@ -1,0 +1,193 @@
+"""In-process "native network layer" with libibverbs semantics (paper §3.1).
+
+This is the lowest layer of the reproduction: it models what Libibverbs (and,
+we argue with the paper, Libfabric/Cassini) gives a communication library:
+
+* communication happens between *devices* — sets of hardware resources
+  (send queue, receive queue, completion queue).  A process may open several
+  devices (→ LCI device replication, uUAR-style hardware parallelism);
+* **receives must be pre-posted**; a two-sided send arriving at a device with
+  no posted receive triggers an RNR (Receiver Not Ready) event, which real
+  hardware turns into a catastrophic retry storm — we count them and make the
+  sender retry from its pending queue;
+* completed operations are reported **only** through per-device hardware
+  completion queues that the library must poll;
+* one-sided RDMA put needs no posted receive and can carry a small immediate
+  value for remote notification.
+
+Each hardware resource is guarded by its *own* small mutex — "native network
+resources typically use distinct locks to ensure thread safety" (§3.3.3).
+Coarse-grained locking, when studied, is applied *above* this layer, exactly
+where the paper locates it (the communication-library layer).
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["Fabric", "NetDevice", "Completion", "FabricStats"]
+
+
+@dataclass
+class Completion:
+    """Hardware completion descriptor."""
+
+    kind: str  # 'send' | 'recv' | 'put'
+    src_rank: int = -1
+    src_dev: int = -1
+    data: Optional[bytes] = None  # payload for recv/put completions
+    imm: Optional[int] = None  # 4-byte immediate (put with signal)
+    ctx: Any = None  # user cookie (send ctx or posted-recv ctx)
+
+
+@dataclass
+class FabricStats:
+    messages: int = 0
+    bytes: int = 0
+    rnr_events: int = 0
+    puts: int = 0
+    sends: int = 0
+
+
+@dataclass
+class _SendDesc:
+    dst_rank: int
+    dst_dev: int
+    data: bytes
+    ctx: Any
+
+
+class NetDevice:
+    """One set of network hardware resources (≈ QP + CQ + SRQ)."""
+
+    def __init__(self, fabric: "Fabric", rank: int, dev_index: int, recv_slots: int = 0):
+        self.fabric = fabric
+        self.rank = rank
+        self.dev_index = dev_index
+        # Each resource has a distinct lock (hardware-level concurrency).
+        self._recv_lock = threading.Lock()
+        self._cq_lock = threading.Lock()
+        self._send_lock = threading.Lock()
+        self._posted_recvs: deque = deque()  # ctx cookies, SRQ-style
+        self._cq: deque = deque()  # hardware completion queue
+        self._pending_sends: deque = deque()  # RNR'd sends awaiting retry
+        for _ in range(recv_slots):
+            self._posted_recvs.append(None)
+
+    # -- receive side -------------------------------------------------------
+    def post_recv(self, ctx: Any = None) -> None:
+        """Pre-post one receive slot (location-agnostic, SRQ semantics)."""
+        with self._recv_lock:
+            self._posted_recvs.append(ctx)
+
+    def posted_recv_count(self) -> int:
+        return len(self._posted_recvs)
+
+    # -- send side ----------------------------------------------------------
+    def post_send(self, dst_rank: int, dst_dev: int, data: bytes, ctx: Any = None) -> None:
+        """Post a two-sided send.  Completion appears in this device's CQ
+        once the remote had a posted receive; otherwise the descriptor parks
+        in the pending queue and is retried by :meth:`hw_progress` (the
+        fabric's stand-in for hardware RNR retransmission)."""
+        desc = _SendDesc(dst_rank, dst_dev, data, ctx)
+        if not self._try_deliver(desc):
+            with self._send_lock:
+                self._pending_sends.append(desc)
+
+    def post_put(self, dst_rank: int, dst_dev: int, data: bytes, imm: int, ctx: Any = None) -> None:
+        """One-sided RDMA put with immediate: lands directly in the remote
+        CQ, no posted receive consumed (LCI *dynamic put* maps here)."""
+        target = self.fabric.device(dst_rank, dst_dev)
+        with target._cq_lock:
+            target._cq.append(
+                Completion(kind="put", src_rank=self.rank, src_dev=self.dev_index, data=data, imm=imm)
+            )
+        with self._cq_lock:
+            self._cq.append(Completion(kind="send", ctx=ctx))
+        st = self.fabric.stats
+        st.messages += 1
+        st.puts += 1
+        st.bytes += len(data)
+
+    def _try_deliver(self, desc: _SendDesc) -> bool:
+        target = self.fabric.device(desc.dst_rank, desc.dst_dev)
+        with target._recv_lock:
+            if not target._posted_recvs:
+                self.fabric.stats.rnr_events += 1
+                return False
+            recv_ctx = target._posted_recvs.popleft()
+        with target._cq_lock:
+            target._cq.append(
+                Completion(
+                    kind="recv",
+                    src_rank=self.rank,
+                    src_dev=self.dev_index,
+                    data=desc.data,
+                    ctx=recv_ctx,
+                )
+            )
+        with self._cq_lock:
+            self._cq.append(Completion(kind="send", ctx=desc.ctx))
+        st = self.fabric.stats
+        st.messages += 1
+        st.sends += 1
+        st.bytes += len(desc.data)
+        return True
+
+    # -- completion / progress ---------------------------------------------
+    def poll_cq(self, max_n: int = 16) -> List[Completion]:
+        """Poll up to ``max_n`` completions (users must poll with sufficient
+        frequency to avoid overflow — we never overflow but the contract
+        stands)."""
+        out: List[Completion] = []
+        with self._cq_lock:
+            for _ in range(max_n):
+                if not self._cq:
+                    break
+                out.append(self._cq.popleft())
+        return out
+
+    def hw_progress(self) -> bool:
+        """Retry RNR'd sends.  Returns True if anything moved."""
+        moved = False
+        with self._send_lock:
+            pending = list(self._pending_sends)
+            self._pending_sends.clear()
+        for desc in pending:
+            if self._try_deliver(desc):
+                moved = True
+            else:
+                with self._send_lock:
+                    self._pending_sends.append(desc)
+        return moved
+
+    def cq_depth(self) -> int:
+        return len(self._cq)
+
+
+class Fabric:
+    """The interconnect: a set of (rank, device) endpoints."""
+
+    def __init__(self, n_ranks: int, devices_per_rank: int = 1, recv_slots: int = 0):
+        self.n_ranks = n_ranks
+        self.devices_per_rank = devices_per_rank
+        self.stats = FabricStats()
+        self._devices: Dict[Tuple[int, int], NetDevice] = {}
+        for r in range(n_ranks):
+            for d in range(devices_per_rank):
+                self._devices[(r, d)] = NetDevice(self, r, d, recv_slots=recv_slots)
+
+    def device(self, rank: int, dev: int = 0) -> NetDevice:
+        return self._devices[(rank, dev)]
+
+    def add_device(self, rank: int) -> NetDevice:
+        """Open an extra device on ``rank`` (device replication)."""
+        idx = sum(1 for (r, _d) in self._devices if r == rank)
+        dev = NetDevice(self, rank, idx)
+        self._devices[(rank, idx)] = dev
+        return dev
+
+    def devices_of(self, rank: int) -> List[NetDevice]:
+        return [d for (r, _i), d in sorted(self._devices.items()) if r == rank]

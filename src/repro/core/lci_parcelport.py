@@ -1,0 +1,264 @@
+"""The LCI parcelport (paper §3.3) with every studied technique as a flag.
+
+Techniques (paper Table 1) and the flag that controls each:
+
+* **Asynchrony** — ``header_mode``: ``'put'`` uses the one-sided *dynamic
+  put* primitive, delivering headers straight into a completion queue;
+  ``'sendrecv'`` pre-posts tagged receives (the MPI-like path) with either a
+  completion queue (``header_comp='queue'``) or a single synchronizer
+  (``header_comp='sync'`` — one pre-posted receive at a time, the variant
+  that serializes header processing, §5.1).
+* **Concurrency** — ``followup_comp``: ``'queue'`` routes every completion
+  through one shared MPMC completion queue (``cq_kind`` picks LCRQ /
+  Michael-Scott / lock-based, §5.2); ``'sync'`` uses a synchronizer pool
+  (the request-pool analogue).
+* **Multithreading** — ``ndevices`` replicates communication resources with
+  a static worker→device mapping; ``lock_mode`` wraps each device in a
+  coarse blocking/try lock or leaves it fine-grained (§5.3).
+* **Progress** — ``progress_mode='explicit'`` invokes the device progress
+  engine on every ``background_work``; ``'implicit'`` only when a
+  completion poll comes back empty (the MPI behaviour).
+
+Invariant that makes the queue-based path lock-free at this layer: chunks of
+one parcel transfer sequentially, so at most one completion record per
+parcel is in flight, so op state machines are never touched concurrently.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Any, List, Optional, Tuple
+
+from .completion import (
+    CompletionQueue,
+    Synchronizer,
+    SynchronizerPool,
+    make_completion_queue,
+)
+from .device import CompletionRecord, LCIDevice, LockMode
+from .fabric import Fabric
+from .parcel import (
+    HEADER_PIGGYBACK_LIMIT,
+    Chunk,
+    Parcel,
+    SendCallback,
+    decode_header,
+    encode_header,
+)
+from .parcelport import Locality, Parcelport
+from .worker import get_worker_id
+
+TAG_HEADER = 0
+HEADER_PREPOST = 16  # sendrecv_queue mode: pre-posted header receives
+
+__all__ = ["LCIParcelport", "LCIPPConfig"]
+
+
+@dataclass
+class LCIPPConfig:
+    name: str = "lci"
+    header_mode: str = "put"  # 'put' | 'sendrecv'
+    header_comp: str = "queue"  # 'queue' | 'sync'  (sendrecv mode only)
+    followup_comp: str = "queue"  # 'queue' | 'sync'
+    cq_kind: str = "lcrq"  # 'lcrq' | 'ms' | 'lock'
+    ndevices: int = 2
+    lock_mode: str = LockMode.NONE
+    progress_mode: str = "explicit"  # 'explicit' | 'implicit'
+    aggregation: bool = False
+
+    def variant(self, **kw) -> "LCIPPConfig":
+        return replace(self, **kw)
+
+
+class _SendOp:
+    __slots__ = ("dest", "parcel", "cb", "msgs", "next_idx", "dev")
+
+    def __init__(self, dest, parcel, cb, msgs, dev):
+        self.dest = dest
+        self.parcel = parcel
+        self.cb = cb
+        self.msgs = msgs
+        self.next_idx = 1
+        self.dev = dev
+
+
+class _RecvOp:
+    __slots__ = ("header", "nzc", "zc_bufs", "idx")
+
+    def __init__(self, header):
+        self.header = header
+        self.nzc: Optional[bytes] = header.piggybacked_nzc
+        self.zc_bufs: List[bytearray] = []
+        self.idx = 0
+
+
+class LCIParcelport(Parcelport):
+    def __init__(self, locality: Locality, fabric: Fabric, config: Optional[LCIPPConfig] = None):
+        config = config or LCIPPConfig()
+        super().__init__(locality, aggregation=config.aggregation)
+        self.cfg = config
+        rank = locality.rank
+        # The shared completion queue (across devices, to reduce load
+        # imbalance — paper §3.3.3).
+        self.cq: CompletionQueue = make_completion_queue(config.cq_kind)
+        self.sync_pool = SynchronizerPool()
+        self.devices: List[LCIDevice] = []
+        for d in range(config.ndevices):
+            net = fabric.device(rank, d)
+            dev = LCIDevice(net, lock_mode=config.lock_mode, put_target_comp=self.cq)
+            self.devices.append(dev)
+        # Header receive plumbing for sendrecv mode.
+        self._header_sync: Optional[Synchronizer] = None
+        self._header_sync_lock = threading.Lock()
+        if config.header_mode == "sendrecv":
+            if config.header_comp == "sync":
+                self._header_sync = Synchronizer()
+                self.devices[0].post_recv(-1, TAG_HEADER, self._header_sync, ctx="header")
+            else:
+                for dev in self.devices:
+                    for _ in range(HEADER_PREPOST):
+                        dev.post_recv(-1, TAG_HEADER, self.cq, ctx=("header", dev))
+
+    # ------------------------------------------------------------------ send
+    def _worker_device(self) -> int:
+        return get_worker_id() % self.cfg.ndevices
+
+    def _comp_for(self, kind: str, op: Any) -> Any:
+        """Completion object for an operation, per the concurrency flag."""
+        if self.cfg.followup_comp == "queue":
+            return self.cq
+        sync = Synchronizer()
+        self.sync_pool.add(sync, (kind, op))
+        return sync
+
+    def _send_impl(self, dest: int, parcel: Parcel, cb: Optional[SendCallback]) -> None:
+        d = self._worker_device()
+        header = encode_header(parcel, device_index=d)
+        msgs: List[Tuple[int, bytes]] = [(TAG_HEADER, header)]
+        if parcel.nzc_chunk.size > HEADER_PIGGYBACK_LIMIT:
+            msgs.append((parcel.parcel_id, parcel.nzc_chunk.data))
+        for c in parcel.zc_chunks:
+            msgs.append((parcel.parcel_id, c.data))
+        op = _SendOp(dest, parcel, cb, msgs, d)
+        dev = self.devices[d]
+        comp = self._comp_for("send", op)
+        if self.cfg.header_mode == "put":
+            dev.put_dynamic(dest, d, header, comp, ctx=("send", op))
+        else:
+            dev.post_send(dest, d, TAG_HEADER, header, comp, ctx=("send", op))
+        self.stats_sent += 1
+
+    def _advance_send(self, op: _SendOp) -> None:
+        if op.next_idx < len(op.msgs):
+            tag, data = op.msgs[op.next_idx]
+            op.next_idx += 1
+            dev = self.devices[op.dev]
+            comp = self._comp_for("send", op)
+            dev.post_send(op.dest, op.dev, tag, data, comp, ctx=("send", op))
+        else:
+            if op.cb is not None:
+                op.cb(op.parcel)
+
+    # ------------------------------------------------------------------ recv
+    def _process_header(self, src: int, payload: bytes) -> None:
+        h = decode_header(payload)
+        op = _RecvOp(h)
+        if h.piggybacked_nzc is not None and not h.zc_sizes:
+            self._finish_recv(op)
+            return
+        dev = self.devices[h.device_index]
+        comp = self._comp_for("recv", op)
+        dev.post_recv(h.source, h.parcel_id, comp, ctx=("recv", op))
+
+    def _advance_recv(self, op: _RecvOp, rec: CompletionRecord) -> None:
+        h = op.header
+        if op.nzc is None:
+            op.nzc = rec.data
+        else:
+            if not op.zc_bufs:
+                op.zc_bufs = self.locality.allocate_zc_chunks(op.nzc)
+            op.zc_bufs[op.idx][:] = rec.data
+            op.idx += 1
+        if op.idx < len(h.zc_sizes):
+            dev = self.devices[h.device_index]
+            comp = self._comp_for("recv", op)
+            dev.post_recv(h.source, h.parcel_id, comp, ctx=("recv", op))
+        else:
+            self._finish_recv(op)
+
+    def _finish_recv(self, op: _RecvOp) -> None:
+        h = op.header
+        if h.zc_sizes and not op.zc_bufs:
+            op.zc_bufs = self.locality.allocate_zc_chunks(op.nzc)
+        parcel = Parcel(
+            parcel_id=h.parcel_id,
+            source=h.source,
+            dest=h.dest,
+            nzc_chunk=Chunk(bytes(op.nzc)),
+            zc_chunks=[Chunk(bytes(b)) for b in op.zc_bufs],
+            device_index=h.device_index,
+        )
+        self.deliver(parcel)
+
+    # ------------------------------------------------------------- dispatch
+    def _dispatch(self, rec: CompletionRecord) -> None:
+        if rec.op == "put_recv":
+            self._process_header(rec.src_rank, rec.data)
+            return
+        kind_op = rec.ctx
+        if kind_op == ("header",) or (isinstance(kind_op, tuple) and kind_op and kind_op[0] == "header"):
+            # sendrecv_queue header receive: re-post, then process.
+            dev = kind_op[1]
+            dev.post_recv(-1, TAG_HEADER, self.cq, ctx=("header", dev))
+            self._process_header(rec.src_rank, rec.data)
+            return
+        kind, op = kind_op
+        if kind == "send":
+            self._advance_send(op)
+        else:
+            self._advance_recv(op, rec)
+
+    def background_work(self) -> bool:
+        cfg = self.cfg
+        progressed = False
+        my_dev = self.devices[self._worker_device()]
+        if cfg.progress_mode == "explicit":
+            progressed |= my_dev.progress()
+
+        polled_something = False
+        if cfg.followup_comp == "queue" or cfg.header_mode == "put":
+            for _ in range(8):
+                rec = self.cq.pop()
+                if rec is None:
+                    break
+                polled_something = True
+                progressed = True
+                self._dispatch(rec)
+        if cfg.followup_comp == "sync":
+            item = self.sync_pool.poll_one()
+            if item is not None:
+                (kind, op), rec = item
+                polled_something = True
+                progressed = True
+                if kind == "send":
+                    self._advance_send(op)
+                else:
+                    self._advance_recv(op, rec)
+        if self._header_sync is not None:
+            # single-synchronizer header path (sendrecv_sync): try-lock so a
+            # single thread owns the test (MPI-style).
+            if self._header_sync_lock.acquire(blocking=False):
+                try:
+                    rec = self._header_sync.test()
+                    if rec is not None:
+                        polled_something = True
+                        progressed = True
+                        self.devices[0].post_recv(-1, TAG_HEADER, self._header_sync, ctx="header")
+                        self._process_header(rec.src_rank, rec.data)
+                finally:
+                    self._header_sync_lock.release()
+        if cfg.progress_mode == "implicit" and not polled_something:
+            # the MPI behaviour: progress only as a side effect of a failed
+            # completion test
+            progressed |= my_dev.progress()
+        return progressed

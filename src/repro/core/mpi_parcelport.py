@@ -1,0 +1,196 @@
+"""The MPI parcelport (the paper's baseline, §3.3).
+
+Reproduces the structure the paper analyses:
+
+* header messages received through a single pre-posted
+  ``MPI_Irecv(MPI_ANY_SOURCE)`` that ``background_work`` polls under a
+  try-lock — only one thread at a time can proceed down the header path
+  (the sequential bottleneck of §3.3.1);
+* pending sends and follow-up receives live in two shared request pools
+  (deque + try-lock), and each ``background_work`` call tests **one**
+  request per pool, round-robin (§3.3.2);
+* progress happens only implicitly inside ``MPI_Test`` (§3.3.4);
+* chunks of one parcel are transferred sequentially (§3.2);
+* optional parcel aggregation (= the paper's ``mpi_a``).
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Any, Callable, List, Optional, Tuple
+
+from .fabric import Fabric
+from .mpi_sim import ANY_SOURCE, MPIRequest, MPISim
+from .parcel import (
+    HEADER_PIGGYBACK_LIMIT,
+    Chunk,
+    Parcel,
+    SendCallback,
+    decode_header,
+    encode_header,
+)
+from .parcelport import Locality, Parcelport
+
+TAG_HEADER = 0
+
+__all__ = ["MPIParcelport", "TAG_HEADER"]
+
+
+class _SendOp:
+    __slots__ = ("dest", "parcel", "cb", "msgs", "next_idx")
+
+    def __init__(self, dest: int, parcel: Parcel, cb: Optional[SendCallback], msgs: List[Tuple[int, bytes]]):
+        self.dest = dest
+        self.parcel = parcel
+        self.cb = cb
+        self.msgs = msgs  # [(tag, data)] sent sequentially
+        self.next_idx = 1  # msgs[0] already posted
+
+
+class _RecvOp:
+    __slots__ = ("src", "header", "nzc", "zc_bufs", "pending", "idx")
+
+    def __init__(self, src: int, header: Any):
+        self.src = src
+        self.header = header
+        self.nzc: Optional[bytes] = header.piggybacked_nzc
+        self.zc_bufs: List[bytearray] = []
+        self.pending: List[int] = []  # remaining message sizes (just for bookkeeping)
+        self.idx = 0
+
+
+class _RequestPool:
+    """Shared pool of (request, op) pairs, one try-locked test per call."""
+
+    def __init__(self) -> None:
+        self._q: deque = deque()
+        self._lock = threading.Lock()
+
+    def add(self, req: MPIRequest, op: Any) -> None:
+        with self._lock:
+            self._q.append((req, op))
+
+    def poll_one(self) -> Optional[Tuple[MPIRequest, Any]]:
+        if not self._lock.acquire(blocking=False):
+            return None
+        try:
+            if not self._q:
+                return None
+            return self._q.popleft()
+        finally:
+            self._lock.release()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class MPIParcelport(Parcelport):
+    def __init__(self, locality: Locality, fabric: Fabric, aggregation: bool = False):
+        super().__init__(locality, aggregation=aggregation)
+        self.mpi = MPISim(fabric, locality.rank)
+        self._send_pool = _RequestPool()
+        self._recv_pool = _RequestPool()
+        self._header_lock = threading.Lock()
+        self._header_req = self.mpi.irecv(ANY_SOURCE, TAG_HEADER)
+
+    # -- sending --------------------------------------------------------------
+    def _send_impl(self, dest: int, parcel: Parcel, cb: Optional[SendCallback]) -> None:
+        header = encode_header(parcel, device_index=0)
+        msgs: List[Tuple[int, bytes]] = [(TAG_HEADER, header)]
+        if parcel.nzc_chunk.size > HEADER_PIGGYBACK_LIMIT:
+            msgs.append((parcel.parcel_id, parcel.nzc_chunk.data))
+        for c in parcel.zc_chunks:
+            msgs.append((parcel.parcel_id, c.data))
+        op = _SendOp(dest, parcel, cb, msgs)
+        req = self.mpi.isend(dest, TAG_HEADER, header)
+        self.stats_sent += 1
+        self._send_pool.add(req, op)
+
+    def _advance_send(self, req: MPIRequest, op: _SendOp) -> bool:
+        done, _ = self.mpi.test(req)
+        if not done:
+            self._send_pool.add(req, op)
+            return False
+        if op.next_idx < len(op.msgs):
+            tag, data = op.msgs[op.next_idx]
+            op.next_idx += 1
+            nreq = self.mpi.isend(op.dest, tag, data)
+            self._send_pool.add(nreq, op)
+        else:
+            if op.cb is not None:
+                op.cb(op.parcel)
+        return True
+
+    # -- receiving --------------------------------------------------------------
+    def _check_header(self) -> bool:
+        """Poll the single any-source header receive (try-lock: only one
+        thread proceeds; this is the paper's sequential bottleneck)."""
+        if not self._header_lock.acquire(blocking=False):
+            return False
+        try:
+            done, payload = self.mpi.test(self._header_req)
+            if not done:
+                return False
+            # Pre-post the next any-source receive *before* processing.
+            self._header_req = self.mpi.irecv(ANY_SOURCE, TAG_HEADER)
+        finally:
+            self._header_lock.release()
+        self._process_header(payload)
+        return True
+
+    def _process_header(self, payload: bytes) -> None:
+        h = decode_header(payload)
+        op = _RecvOp(h.source, h)
+        if h.piggybacked_nzc is not None and not h.zc_sizes:
+            self._finish_recv(op)
+            return
+        # Sequential follow-ups: first the nzc chunk if it did not piggyback,
+        # then each zero-copy chunk.
+        req = self.mpi.irecv(h.source, h.parcel_id)
+        self._recv_pool.add(req, op)
+
+    def _advance_recv(self, req: MPIRequest, op: _RecvOp) -> bool:
+        done, payload = self.mpi.test(req)
+        if not done:
+            self._recv_pool.add(req, op)
+            return False
+        h = op.header
+        if op.nzc is None:
+            op.nzc = payload
+        else:
+            # a zero-copy chunk: copy into the upper-layer allocated buffer
+            if not op.zc_bufs:
+                op.zc_bufs = self.locality.allocate_zc_chunks(op.nzc)
+            buf = op.zc_bufs[op.idx]
+            buf[:] = payload
+            op.idx += 1
+        if op.idx < len(h.zc_sizes):
+            nreq = self.mpi.irecv(h.source, h.parcel_id)
+            self._recv_pool.add(nreq, op)
+        else:
+            self._finish_recv(op)
+        return True
+
+    def _finish_recv(self, op: _RecvOp) -> None:
+        h = op.header
+        if h.zc_sizes and not op.zc_bufs:
+            op.zc_bufs = self.locality.allocate_zc_chunks(op.nzc)
+        parcel = Parcel(
+            parcel_id=h.parcel_id,
+            source=h.source,
+            dest=h.dest,
+            nzc_chunk=Chunk(bytes(op.nzc)),
+            zc_chunks=[Chunk(bytes(b)) for b in op.zc_bufs],
+        )
+        self.deliver(parcel)
+
+    # -- the worker entry point ---------------------------------------------
+    def background_work(self) -> bool:
+        progressed = self._check_header()
+        item = self._send_pool.poll_one()
+        if item is not None:
+            progressed |= self._advance_send(*item)
+        item = self._recv_pool.poll_one()
+        if item is not None:
+            progressed |= self._advance_recv(*item)
+        return progressed

@@ -1,0 +1,83 @@
+"""A faithful-behaviour MPI emulation over the in-process fabric.
+
+Models the MPI properties the paper identifies as the source of the MPI
+parcelport's inefficiencies (§3.3):
+
+* a **single device** per process, wrapped in one coarse-grained blocking
+  lock (the typical MPI+UCX structure, §3.3.3);
+* the only completion mechanism is the per-operation request object,
+  tested one at a time (``MPI_Test``), §3.3.2;
+* **no explicit progress**: the progress engine runs only as a side effect
+  of ``test`` calls (§3.3.4 — "Current MPICH and OpenMPI implementations
+  only poll the progress engine during calls to MPI_Test");
+* tag matching on every receive, including ``MPI_ANY_SOURCE``;
+* concurrent testing of a *shared* request is disallowed (MPI 4.1 §12.6.2),
+  so the client (the parcelport) must wrap its own try-lock around tests.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Optional, Tuple
+
+from .completion import Synchronizer
+from .device import LCIDevice, LockMode
+from .fabric import Fabric
+
+__all__ = ["MPISim", "MPIRequest", "ANY_SOURCE"]
+
+ANY_SOURCE = -1
+
+
+class MPIRequest:
+    __slots__ = ("sync", "kind", "done", "payload", "src")
+
+    def __init__(self, kind: str):
+        self.sync = Synchronizer()
+        self.kind = kind  # 'send' | 'recv'
+        self.done = False
+        self.payload: Optional[bytes] = None
+        self.src = -1
+
+
+class MPISim:
+    """Per-rank MPI library instance."""
+
+    def __init__(self, fabric: Fabric, rank: int):
+        # MPI internals: one device, coarse-grained *blocking* lock.
+        self._dev = LCIDevice(fabric.device(rank, 0), lock_mode=LockMode.BLOCK)
+        self.rank = rank
+        # MPI's internal global lock (MPI_THREAD_MULTIPLE big lock).
+        self._big_lock = threading.Lock()
+
+    def isend(self, dest: int, tag: int, data: bytes) -> MPIRequest:
+        req = MPIRequest("send")
+        with self._big_lock:
+            self._dev.post_send(dest, 0, tag, data, req.sync)
+        return req
+
+    def irecv(self, source: int, tag: int) -> MPIRequest:
+        req = MPIRequest("recv")
+        with self._big_lock:
+            self._dev.post_recv(source, tag, req.sync)
+        return req
+
+    def test(self, req: MPIRequest) -> Tuple[bool, Optional[bytes]]:
+        """MPI_Test: progress runs here and only here (implicit progress).
+
+        The caller must guarantee no concurrent test of the same request —
+        the MPI parcelport does this with try-locks around its request
+        pools, which is exactly the structure the paper critiques.
+        """
+        if req.done:
+            return True, req.payload
+        with self._big_lock:
+            # implicit progress as a side effect of testing
+            self._dev.progress()
+        rec = req.sync.test()
+        if rec is None:
+            return False, None
+        req.done = True
+        if req.kind == "recv":
+            req.payload = rec.data
+            req.src = rec.src_rank
+        return True, req.payload

@@ -1,0 +1,223 @@
+"""The HPX parcelport abstraction (paper §2.3, Listing 2) and localities.
+
+The contract a parcelport implements::
+
+    send(locality, parcel, cb) -> None        # any worker thread may call
+    background_work() -> bool                 # workers call when idle
+
+and the upper layer provides::
+
+    allocate_zc_chunks(nzc_chunk) -> buffers  # receiver-side zc allocation
+    handle_parcel(parcel) -> None             # deliver to the runtime
+
+Also implements HPX **parcel aggregation** (paper §2.2.2): one parcel queue
+per destination; a send enqueues then drains-and-merges everything pending
+for that destination into a single aggregate parcel.
+"""
+from __future__ import annotations
+
+import itertools
+import struct
+import threading
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from .fabric import Fabric
+from .parcel import (
+    Chunk,
+    Parcel,
+    SendCallback,
+    deserialize_action,
+    serialize_action,
+    zc_sizes_from_nzc,
+)
+
+__all__ = ["Parcelport", "Locality", "World", "aggregate_parcels", "split_aggregate"]
+
+AGG_MAGIC = 0xA6
+
+
+def aggregate_parcels(parcels: Sequence[Parcel]) -> Parcel:
+    """Merge parcels sharing a destination into one (paper §2.2.2)."""
+    assert parcels, "cannot aggregate zero parcels"
+    first = parcels[0]
+    parts = [struct.pack("<BI", AGG_MAGIC, len(parcels))]
+    zc: List[Chunk] = []
+    for p in parcels:
+        parts.append(struct.pack("<II", p.nzc_chunk.size, len(p.zc_chunks)))
+        parts.append(p.nzc_chunk.data)
+        zc.extend(p.zc_chunks)
+    return Parcel(
+        parcel_id=first.parcel_id,
+        source=first.source,
+        dest=first.dest,
+        nzc_chunk=Chunk(b"".join(parts)),
+        zc_chunks=zc,
+    )
+
+
+def is_aggregate(parcel: Parcel) -> bool:
+    return parcel.nzc_chunk.size >= 5 and parcel.nzc_chunk.data[0] == AGG_MAGIC
+
+
+def split_aggregate(parcel: Parcel) -> List[Parcel]:
+    buf = parcel.nzc_chunk.data
+    (_, n) = struct.unpack_from("<BI", buf, 0)
+    off = 5
+    zc_off = 0
+    out: List[Parcel] = []
+    for i in range(n):
+        nzc_size, n_zc = struct.unpack_from("<II", buf, off)
+        off += 8
+        nzc = buf[off : off + nzc_size]
+        off += nzc_size
+        chunks = parcel.zc_chunks[zc_off : zc_off + n_zc]
+        zc_off += n_zc
+        out.append(
+            Parcel(
+                parcel_id=parcel.parcel_id * 1000 + i,
+                source=parcel.source,
+                dest=parcel.dest,
+                nzc_chunk=Chunk(bytes(nzc)),
+                zc_chunks=list(chunks),
+            )
+        )
+    return out
+
+
+class Parcelport:
+    """Abstract parcelport (one per communication library per locality)."""
+
+    def __init__(self, locality: "Locality", aggregation: bool = False):
+        self.locality = locality
+        self.aggregation = aggregation
+        self._agg_queues: Dict[int, deque] = {}
+        self._agg_lock = threading.Lock()
+        self.stats_sent = 0
+        self.stats_received = 0
+
+    # -- public API (Listing 2) ---------------------------------------------
+    def send(self, dest: int, parcel: Parcel, cb: Optional[SendCallback] = None) -> None:
+        if not self.aggregation:
+            self._send_impl(dest, parcel, cb)
+            return
+        # Aggregation path: enqueue, then drain everything for this dest.
+        with self._agg_lock:
+            q = self._agg_queues.setdefault(dest, deque())
+            q.append((parcel, cb))
+            drained = list(q)
+            q.clear()
+        if not drained:
+            return
+        if len(drained) == 1:
+            self._send_impl(dest, drained[0][0], drained[0][1])
+            return
+        cbs = [c for (_p, c) in drained if c is not None]
+        agg = aggregate_parcels([p for (p, _c) in drained])
+
+        def agg_cb(_parcel: Parcel) -> None:
+            for c in cbs:
+                c(_parcel)
+
+        self._send_impl(dest, agg, agg_cb)
+
+    def background_work(self) -> bool:
+        raise NotImplementedError
+
+    # -- subclass hook --------------------------------------------------------
+    def _send_impl(self, dest: int, parcel: Parcel, cb: Optional[SendCallback]) -> None:
+        raise NotImplementedError
+
+    # -- receiver-side glue ---------------------------------------------------
+    def deliver(self, parcel: Parcel) -> None:
+        self.stats_received += 1
+        if is_aggregate(parcel):
+            for p in split_aggregate(parcel):
+                self.locality.handle_parcel(p)
+        else:
+            self.locality.handle_parcel(parcel)
+
+
+class Locality:
+    """One HPX process: action registry + the upper-layer callbacks."""
+
+    def __init__(self, rank: int, world: "World"):
+        self.rank = rank
+        self.world = world
+        self.actions: Dict[str, Callable[..., Any]] = {}
+        self.parcelport: Optional[Parcelport] = None
+        # Locality-unique parcel ids, also used as follow-up message tags.
+        # Start at 1: tag 0 is reserved for header messages (TAG_HEADER).
+        self._pid = itertools.count((rank << 40) + 1)
+        self.handled = itertools.count()
+        self.handled_count = 0
+
+    def register_action(self, name: str, fn: Callable[..., Any]) -> None:
+        self.actions[name] = fn
+
+    # upper-layer callbacks (Listing 2) --------------------------------------
+    def allocate_zc_chunks(self, nzc_data: bytes) -> List[bytearray]:
+        """Allocate receive buffers for zero-copy chunks; the nzc chunk
+        carries their sizes."""
+        return [bytearray(sz) for sz in zc_sizes_from_nzc(nzc_data)]
+
+    def handle_parcel(self, parcel: Parcel) -> None:
+        action, args = deserialize_action(parcel)
+        self.handled_count += 1
+        fn = self.actions.get(action)
+        if fn is None:
+            raise KeyError(f"locality {self.rank}: unknown action {action!r}")
+        fn(*args)
+
+    # convenience: HPX async(locality, action, args...) ----------------------
+    def async_action(
+        self,
+        dest: int,
+        action: str,
+        *args: Any,
+        cb: Optional[SendCallback] = None,
+        zero_copy_threshold: Optional[int] = None,
+    ) -> None:
+        kw = {}
+        if zero_copy_threshold is not None:
+            kw["zero_copy_threshold"] = zero_copy_threshold
+        parcel = serialize_action(next(self._pid), self.rank, dest, action, args, **kw)
+        assert self.parcelport is not None, "parcelport not attached"
+        self.parcelport.send(dest, parcel, cb)
+
+
+class World:
+    """A set of in-process localities joined by one fabric."""
+
+    def __init__(
+        self,
+        n_localities: int,
+        parcelport_factory: Callable[["Locality", Fabric], Parcelport],
+        devices_per_rank: int = 1,
+    ):
+        self.fabric = Fabric(n_localities, devices_per_rank=devices_per_rank)
+        self.localities = [Locality(r, self) for r in range(n_localities)]
+        for loc in self.localities:
+            loc.parcelport = parcelport_factory(loc, self.fabric)
+
+    def progress_all(self, rounds: int = 1) -> bool:
+        """Drive every locality's background work (single-threaded pump,
+        used by tests; the executor drives this from worker threads)."""
+        any_progress = False
+        for _ in range(rounds):
+            for loc in self.localities:
+                if loc.parcelport.background_work():
+                    any_progress = True
+        return any_progress
+
+    def drain(self, max_rounds: int = 100_000) -> None:
+        """Pump until quiescent (no progress for a few consecutive rounds)."""
+        idle = 0
+        for _ in range(max_rounds):
+            if self.progress_all():
+                idle = 0
+            else:
+                idle += 1
+                if idle > 8:
+                    return
+        raise RuntimeError("world did not quiesce")

@@ -1,0 +1,102 @@
+"""Named parcelport variants — one per configuration in paper Figs 6-9."""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from .device import LockMode
+from .fabric import Fabric
+from .lci_parcelport import LCIParcelport, LCIPPConfig
+from .mpi_parcelport import MPIParcelport
+from .parcelport import Locality, Parcelport
+
+__all__ = ["VARIANTS", "make_parcelport_factory", "variant_names", "max_devices"]
+
+# The paper's evaluated configurations.
+VARIANTS: Dict[str, LCIPPConfig] = {
+    # §4: the full-fledged LCI parcelport ("base" in §5 factor studies).
+    "lci": LCIPPConfig(name="lci"),
+    "base": LCIPPConfig(name="base"),
+    # §5.1 asynchrony: two-sided header transfer keeps the completion queue…
+    "sendrecv_queue": LCIPPConfig(name="sendrecv_queue", header_mode="sendrecv", header_comp="queue"),
+    # …or drops to a single synchronizer (one pre-posted receive at a time).
+    "sendrecv_sync": LCIPPConfig(name="sendrecv_sync", header_mode="sendrecv", header_comp="sync"),
+    # §5.2 concurrency: synchronizer pool instead of completion queue for
+    # everything except header dynamic puts.
+    "sync": LCIPPConfig(name="sync", followup_comp="sync"),
+    "queue_lock": LCIPPConfig(name="queue_lock", cq_kind="lock"),
+    "queue_ms": LCIPPConfig(name="queue_ms", cq_kind="ms"),
+    # §5.3 multithreading/progress: MPI-mimicking ladder.  All use
+    # send/recv + synchronizers (completion queues don't work under coarse
+    # locks, per the paper).
+    "block": LCIPPConfig(
+        name="block",
+        header_mode="sendrecv",
+        header_comp="sync",
+        followup_comp="sync",
+        ndevices=1,
+        lock_mode=LockMode.BLOCK,
+        progress_mode="implicit",
+    ),
+    "try": LCIPPConfig(
+        name="try",
+        header_mode="sendrecv",
+        header_comp="sync",
+        followup_comp="sync",
+        ndevices=1,
+        lock_mode=LockMode.TRY,
+        progress_mode="implicit",
+    ),
+    "try_progress": LCIPPConfig(
+        name="try_progress",
+        header_mode="sendrecv",
+        header_comp="sync",
+        followup_comp="sync",
+        ndevices=1,
+        lock_mode=LockMode.TRY,
+        progress_mode="explicit",
+    ),
+    # the catastrophic combination (§5.3): blocking lock + eager progress
+    "progress": LCIPPConfig(
+        name="progress",
+        header_mode="sendrecv",
+        header_comp="sync",
+        followup_comp="sync",
+        ndevices=1,
+        lock_mode=LockMode.BLOCK,
+        progress_mode="explicit",
+    ),
+    "block_d2": LCIPPConfig(
+        name="block_d2",
+        header_mode="sendrecv",
+        header_comp="sync",
+        followup_comp="sync",
+        ndevices=2,
+        lock_mode=LockMode.BLOCK,
+        progress_mode="implicit",
+    ),
+}
+
+# device-scaling families (paper Fig 9)
+for _n in (1, 2, 4, 8, 16, 32):
+    VARIANTS[f"lci_d{_n}"] = LCIPPConfig(name=f"lci_d{_n}", ndevices=_n)
+    VARIANTS[f"lci_try_d{_n}"] = LCIPPConfig(name=f"lci_try_d{_n}", ndevices=_n, lock_mode=LockMode.TRY)
+
+
+def variant_names():
+    return ["mpi", "mpi_a"] + sorted(VARIANTS)
+
+
+def max_devices(name: str) -> int:
+    if name in ("mpi", "mpi_a"):
+        return 1
+    return VARIANTS[name].ndevices
+
+
+def make_parcelport_factory(name: str) -> Callable[[Locality, Fabric], Parcelport]:
+    """Factory for :class:`repro.core.parcelport.World`."""
+    if name == "mpi":
+        return lambda loc, fab: MPIParcelport(loc, fab, aggregation=False)
+    if name == "mpi_a":
+        return lambda loc, fab: MPIParcelport(loc, fab, aggregation=True)
+    cfg = VARIANTS[name]
+    return lambda loc, fab: LCIParcelport(loc, fab, cfg)

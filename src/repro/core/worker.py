@@ -1,0 +1,25 @@
+"""Thread-local worker identities.
+
+The LCI parcelport uses a *static* mapping from worker threads to devices
+(paper §3.3.3).  The executor assigns ids; unknown threads (e.g. the main
+thread in tests) get one lazily from a global counter.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+
+_tls = threading.local()
+_counter = itertools.count()
+
+
+def set_worker_id(wid: int) -> None:
+    _tls.wid = wid
+
+
+def get_worker_id() -> int:
+    wid = getattr(_tls, "wid", None)
+    if wid is None:
+        wid = next(_counter)
+        _tls.wid = wid
+    return wid

@@ -1,0 +1,3 @@
+from .pipeline import PrefetchingLoader, SyntheticLM
+
+__all__ = ["PrefetchingLoader", "SyntheticLM"]

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+The paper itself is a host-networking study with no device kernels; these
+kernels belong to the *training/serving framework* built around it: flash
+attention, the Mamba2 SSD intra-chunk block, and the MoE grouped matmul.
+Each has a pure-jnp oracle in :mod:`ref` and is validated with
+``interpret=True`` on CPU; the BlockSpecs are the TPU deployment config.
+"""
+from .ops import attention, expert_ffn_matmul, flash_attention, grouped_matmul, kernel_mode, ssd_chunk_kernel
+
+__all__ = [
+    "attention",
+    "expert_ffn_matmul",
+    "flash_attention",
+    "grouped_matmul",
+    "kernel_mode",
+    "ssd_chunk_kernel",
+]

@@ -1,0 +1,54 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+The models call these through the ``kernel_impl`` switch (config/env):
+``"xla"`` (default — reference lowering, used by the dry-run and CPU
+tests) or ``"pallas"`` (TPU deployment; ``interpret=True`` on CPU).
+Numerics contracts are pinned by tests against :mod:`repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .moe_gmm import grouped_matmul
+from .ref import attention_ref, grouped_matmul_ref, ssd_chunk_ref
+from .ssd_scan import ssd_chunk_kernel
+
+__all__ = [
+    "flash_attention",
+    "ssd_chunk_kernel",
+    "grouped_matmul",
+    "attention",
+    "expert_ffn_matmul",
+    "kernel_mode",
+]
+
+
+def kernel_mode() -> str:
+    """'pallas' | 'pallas-interpret' | 'xla' (default on CPU)."""
+    mode = os.environ.get("REPRO_KERNELS", "")
+    if mode:
+        return mode
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def attention(q, k, v, *, causal=True, window=0, chunk=0) -> jax.Array:
+    mode = kernel_mode()
+    if mode == "pallas":
+        return flash_attention(q, k, v, causal=causal, window=window, chunk=chunk)
+    if mode == "pallas-interpret":
+        return flash_attention(q, k, v, causal=causal, window=window, chunk=chunk, interpret=True)
+    return attention_ref(q, k, v, causal=causal, window=window, chunk=chunk)
+
+
+def expert_ffn_matmul(x, w) -> jax.Array:
+    mode = kernel_mode()
+    if mode == "pallas":
+        return grouped_matmul(x, w)
+    if mode == "pallas-interpret":
+        return grouped_matmul(x, w, interpret=True)
+    return grouped_matmul_ref(x, w)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "ssd_chunk_ref", "grouped_matmul_ref"]
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jax.Array,  # (B, S, H, D)
+    k: jax.Array,  # (B, S, KV, D)
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 0,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    if chunk > 0:
+        mask &= (kpos // chunk) == (qpos // chunk)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def ssd_chunk_ref(
+    x: jax.Array,  # (B, Q, H, P) — pre-discretized (x·dt) single chunk
+    a_dt: jax.Array,  # (B, Q, H)
+    b: jax.Array,  # (B, Q, H, N) — groups pre-broadcast
+    c: jax.Array,  # (B, Q, H, N)
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential (recurrent) oracle for one SSD chunk:
+    s_t = exp(a_t)·s_{t-1} + b_t ⊗ x_t ;  y_t = s_t · c_t."""
+    bsz, q, h, p = x.shape
+    n = b.shape[-1]
+    s0 = init_state if init_state is not None else jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(s, inp):
+        xt, at, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        s = jnp.exp(at)[..., None, None] * s + xt[..., None] * bt[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", s, ct)
+        return s, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        a_dt.transpose(1, 0, 2).astype(jnp.float32),
+        b.transpose(1, 0, 2, 3).astype(jnp.float32),
+        c.transpose(1, 0, 2, 3).astype(jnp.float32),
+    )
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), s_fin
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(E, C, D) × (E, D, F) → (E, C, F)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,309 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 host
+placeholder devices stand in for 2 pods × 256 chips.  For each cell the
+appropriate step function (train_step / prefill / decode_step) is jitted
+with the derived shardings, lowered from ShapeDtypeStructs (no
+allocation), compiled, and its memory/cost/collective profile is written
+to ``experiments/dryrun/<cell>.json`` — the roofline layer (§Roofline)
+reads these artifacts.
+
+CLI::
+
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--cells a:s,b:s2]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, cell_is_applicable, get_config, list_archs
+from ..optim import OptHParams
+from ..sharding.logical import use_rules
+from ..sharding.params import batch_specs, cache_specs, opt_specs, param_specs, tree_shardings
+from ..train import TrainConfig, make_train_step
+from .mesh import make_production_mesh, make_rules
+from .specs import abstract_cache, abstract_params, abstract_train_state, input_specs
+
+__all__ = ["dryrun_cell", "collective_bytes", "main"]
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _parse_bytes(type_str: str) -> int:
+    """Bytes of one HLO shape string like 'bf16[8,4096,512]'."""
+    total = 0
+    for m in SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in the (post-SPMD) HLO."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = COLLECTIVE_RE.search(line.split("=")[-1][:120]) if "=" in line else None
+        if not m:
+            continue
+        # only actual op applications: "<shape> <op-name>(" pattern
+        rhs = line.split("=", 1)[1].strip()
+        op = m.group(1)
+        if not re.match(rf"[a-z0-9\[\],() ]*{op}", rhs.split("(")[0]):
+            continue
+        lhs_type = rhs.split(op)[0].strip()
+        b = _parse_bytes(lhs_type)
+        if b:
+            out[op] = out.get(op, 0) + b
+    return out
+
+
+def _cost_analysis(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+    except Exception:
+        return {}
+
+
+def _memory_analysis(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+        keys = [
+            "generated_code_size_in_bytes",
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "alias_size_in_bytes",
+        ]
+        return {k: float(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+    except Exception:
+        return {}
+
+
+def dryrun_cell(
+    arch_name: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    tcfg: Optional[TrainConfig] = None,
+    rules_overrides: Optional[dict] = None,
+    save_hlo: bool = False,
+    out_dir: Optional[Path] = None,
+) -> Dict[str, Any]:
+    arch = get_config(arch_name)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_is_applicable(arch, shape)
+    if not ok:
+        return {"cell": f"{arch_name}×{shape_name}", "status": "skipped", "reason": reason}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    # serving cells shard the KV-cache sequence: over "model" for 32k
+    # shapes, over every axis for the single-request 500k cell
+    overrides = dict(rules_overrides or {})
+    if shape.kind != "train" and "seq_kv" not in overrides:
+        if shape.name == "long_500k":
+            overrides["seq_kv"] = ("data", "model") if not multi_pod else ("pod", "data", "model")
+        else:
+            overrides["seq_kv"] = "model"
+    # §Perf: head counts that don't divide the model axis would replicate
+    # all attention compute/score traffic — switch those cells to
+    # sequence-parallel attention (seq_act) instead
+    model_size = mesh.shape.get("model", 1)
+    if (
+        "seq_act" not in overrides
+        and shape.kind in ("train", "prefill")
+        and arch.n_heads
+        and arch.n_heads % model_size != 0
+    ):
+        overrides.setdefault("seq_act", "model")
+        overrides.setdefault("heads", None)
+        overrides.setdefault("kv_heads", None)
+    rules = make_rules(mesh, long_context=False, overrides=overrides)
+    result_overrides = {k: v for k, v in overrides.items()}
+    tcfg = tcfg or TrainConfig()
+    result: Dict[str, Any] = {
+        "cell": f"{arch_name}×{shape_name}",
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": int(n_dev),
+        "kind": shape.kind,
+        "rules_overrides": {k: str(v) for k, v in result_overrides.items()},
+        "tcfg": {"microbatches": tcfg.microbatches, "remat": tcfg.remat},
+    }
+    with use_rules(rules), mesh:
+        batch = input_specs(arch, shape)
+        b_sh = tree_shardings(mesh, batch_specs(batch, rules), batch)
+        if shape.kind == "train":
+            state = abstract_train_state(arch, tcfg)
+            p_spec = param_specs(state["params"], rules)
+            o_spec = opt_specs(state["opt"], state["params"], rules, zero=True, mesh=mesh)
+            s_spec: Dict[str, Any] = {"params": p_spec, "opt": o_spec, "step": jax.sharding.PartitionSpec()}
+            if "ef" in state:
+                s_spec["ef"] = p_spec
+            s_sh = tree_shardings(mesh, s_spec, state)
+            hp = OptHParams()
+            step = make_train_step(arch, hp, tcfg)
+            jitted = jax.jit(step, in_shardings=(s_sh, b_sh), donate_argnums=(0,))
+            lowered = jitted.lower(state, batch)
+        else:
+            from ..models import decode_step, prefill
+
+            params = abstract_params(arch)
+            p_sh = tree_shardings(mesh, param_specs(params, rules), params)
+            context = shape.seq_len
+            cache = abstract_cache(arch, shape.global_batch, context)
+            c_sh = tree_shardings(mesh, cache_specs(cache, rules), cache)
+            if shape.kind == "prefill":
+                fn = lambda p, b, c: prefill(p, arch, b, c)
+                jitted = jax.jit(fn, in_shardings=(p_sh, b_sh, c_sh), donate_argnums=(2,))
+                lowered = jitted.lower(params, batch, cache)
+            else:
+                fn = lambda p, t, pos, c: decode_step(p, arch, t, pos, c)
+                jitted = jax.jit(
+                    fn,
+                    in_shardings=(p_sh, b_sh["tokens"], b_sh["positions"], c_sh),
+                    donate_argnums=(3,),
+                )
+                lowered = jitted.lower(params, batch["tokens"], batch["positions"], cache)
+        result["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 1)
+        result["cost"] = _cost_analysis(compiled)
+        result["memory"] = _memory_analysis(compiled)
+        hlo = compiled.as_text()
+        from ..roofline.hlo_parse import analyze_hlo
+
+        analysis = analyze_hlo(hlo)
+        result["collective_bytes"] = analysis.collective_bytes
+        result["dot_flops"] = analysis.dot_flops
+        result["dot_bytes"] = analysis.dot_bytes
+        result["hbm_bytes"] = analysis.hbm_bytes
+        result["while_trip_counts"] = analysis.while_trip_counts
+        result["hlo_lines"] = hlo.count("\n")
+        result["status"] = "ok"
+        if save_hlo and out_dir is not None:
+            (out_dir / f"{arch_name}__{shape_name}__{result['mesh']}.hlo").write_text(hlo)
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--cells", default=None, help="comma list arch:shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument(
+        "--override",
+        action="append",
+        default=[],
+        help="sharding-rule override key=axis (repeatable), e.g. seq_act=model",
+    )
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tcfg = TrainConfig(microbatches=args.microbatches, remat=args.remat)
+    cli_overrides = {}
+    for ov in args.override:
+        k, _, v = ov.partition("=")
+        cli_overrides[k] = None if v in ("", "none", "None") else (
+            tuple(v.split("+")) if "+" in v else v
+        )
+
+    cells = []
+    if args.cells:
+        for c in args.cells.split(","):
+            a, s = c.split(":")
+            cells.append((a, s))
+    elif args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all or --cells"
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    n_fail = 0
+    for arch_name, shape_name in cells:
+        for mp in meshes:
+            tag = f"{arch_name}__{shape_name}__{'pod2' if mp else 'pod1'}"
+            path = out_dir / f"{tag}.json"
+            try:
+                res = dryrun_cell(
+                    arch_name,
+                    shape_name,
+                    multi_pod=mp,
+                    tcfg=tcfg,
+                    rules_overrides=cli_overrides or None,
+                    save_hlo=args.save_hlo,
+                    out_dir=out_dir,
+                )
+            except Exception as e:  # noqa: BLE001 - reported per cell
+                res = {
+                    "cell": f"{arch_name}×{shape_name}",
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "status": "error",
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:],
+                }
+                n_fail += 1
+            path.write_text(json.dumps(res, indent=1))
+            status = res["status"]
+            extra = ""
+            if status == "ok":
+                fl = res["cost"].get("flops", 0)
+                cb = sum(res["collective_bytes"].values())
+                extra = f" lower={res['lower_s']}s compile={res['compile_s']}s flops={fl:.3g} coll={cb/1e9:.2f}GB"
+            elif status == "error":
+                extra = " " + res["error"][:120]
+            print(f"[{status:7s}] {tag}{extra}", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,68 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(arch, shape)`` returns the abstract batch for a cell:
+token ids (+ labels) for training, prompt tokens for prefill, one-token
+batches + cache for decode.  Modality frontends are stubs per the
+assignment: ``frames`` (audio) / ``prefix`` (vision) arrive as precomputed
+embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import model as model_lib
+
+__all__ = ["input_specs", "abstract_params", "abstract_cache", "abstract_train_state"]
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(arch.dtype)
+    if shape.kind == "train":
+        s_text = s - (arch.n_prefix_tokens if arch.frontend == "vision" else 0)
+        batch: Dict[str, Any] = {
+            "tokens": _sds((b, s_text), jnp.int32),
+            "labels": _sds((b, s_text), jnp.int32),
+        }
+        if arch.frontend == "vision":
+            batch["prefix"] = _sds((b, arch.n_prefix_tokens, arch.d_model), dt)
+        if arch.is_encdec:
+            batch["frames"] = _sds((b, arch.encoder_seq, arch.d_model), dt)
+        return batch
+    if shape.kind == "prefill":
+        s_text = s - (arch.n_prefix_tokens if arch.frontend == "vision" else 0)
+        batch = {"tokens": _sds((b, s_text), jnp.int32)}
+        if arch.frontend == "vision":
+            batch["prefix"] = _sds((b, arch.n_prefix_tokens, arch.d_model), dt)
+        if arch.is_encdec:
+            batch["frames"] = _sds((b, arch.encoder_seq, arch.d_model), dt)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "tokens": _sds((b, 1), jnp.int32),
+        "positions": _sds((b,), jnp.int32),
+    }
+
+
+def abstract_params(arch: ArchConfig) -> Any:
+    rng = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda r: model_lib.init_params(r, arch), rng)
+
+
+def abstract_cache(arch: ArchConfig, batch: int, context: int) -> Any:
+    return jax.eval_shape(lambda: model_lib.init_cache(arch, batch, context))
+
+
+def abstract_train_state(arch: ArchConfig, tcfg=None) -> Any:
+    from ..train import init_train_state
+
+    rng = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda r: init_train_state(r, arch, tcfg), rng)

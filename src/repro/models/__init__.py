@@ -1,0 +1,10 @@
+from .model import (
+    decode_step,
+    forward_train,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = ["init_params", "forward_train", "loss_fn", "init_cache", "prefill", "decode_step"]

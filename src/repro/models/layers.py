@@ -1,0 +1,117 @@
+"""Shared model primitives: norms, RoPE, FFN, embeddings.
+
+All modules are pure functions over explicit param pytrees (no framework).
+Initializers return nested dicts of ``jnp`` arrays; every ``init_*`` is
+traceable so ``jax.eval_shape`` gives abstract params for the dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.logical import shard
+
+__all__ = [
+    "Params",
+    "dense_init",
+    "rms_norm",
+    "layer_norm",
+    "rope_frequencies",
+    "apply_rope",
+    "ffn_init",
+    "ffn_apply",
+    "embed_init",
+    "cross_entropy_loss",
+]
+
+Params = Dict[str, jax.Array]
+
+
+def dense_init(rng: jax.Array, shape: Tuple[int, ...], dtype, scale: Optional[float] = None) -> jax.Array:
+    """Truncated-normal fan-in init."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[0])
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies (head_dim//2,) in f32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate ``x`` (..., seq, heads, head_dim) by position-dependent angles.
+
+    ``positions`` is (..., seq) int32 — explicit so the decode path can pass
+    the cache offset.
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- FFN
+def ffn_init(rng: jax.Array, d_model: int, d_ff: int, dtype, gated: bool = True) -> Params:
+    ks = jax.random.split(rng, 3)
+    p = {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def ffn_apply(p: Params, x: jax.Array, gated: bool = True) -> jax.Array:
+    up = shard(jnp.einsum("...d,df->...f", x, p["w_up"]), "batch", "seq", "mlp")
+    if gated:
+        gate = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# ----------------------------------------------------------------- embedding
+def embed_init(rng: jax.Array, vocab: int, d_model: int, dtype) -> jax.Array:
+    return dense_init(rng, (vocab, d_model), dtype, scale=1.0)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross entropy in f32; ``mask`` (same shape as labels)
+    excludes padding/vision-prefix positions."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,151 @@
+"""Mixture-of-Experts FFN: shared + routed experts, capacity dispatch.
+
+Token-choice top-k routing with per-expert capacity.  Two dispatch
+implementations:
+
+* ``scatter`` (default) — tokens scatter-add into per-expert queues
+  (B,E,C,D) and gather back; memory O(S·D + E·C·D), survives 32k-token
+  sequences.
+* ``einsum`` — classic GShard dense dispatch/combine masks (B,S,E,C);
+  O(S·E·C) memory, used as the small-shape oracle in tests.
+
+The expert dimension shards over the "model" mesh axis (expert
+parallelism); with tokens sharded over "data", XLA lowers the queue
+construction to the EP all-to-all visible in the dry-run's collective
+schedule.  Covers both assigned MoE flavours: deepseek-moe-16b (2 shared +
+64 routed, top-6, fine-grained) and llama4-scout (1 shared + 16 routed,
+top-1).  The grouped-matmul Pallas kernel (:mod:`repro.kernels.moe_gmm`)
+is the TPU hot-spot implementation of the per-expert FFN batch.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.logical import shard
+from .layers import Params, dense_init, ffn_apply, ffn_init
+
+__all__ = ["moe_init", "moe_apply", "expert_capacity"]
+
+
+def expert_capacity(tokens: int, cfg: ArchConfig) -> int:
+    """Per-expert token capacity for a routing group of ``tokens`` tokens."""
+    cap = int(math.ceil(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(cap, 4)
+
+
+def moe_init(rng: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    p: Params = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "w_up": dense_init(jax.random.fold_in(ks[1], 1), (e, d, f), dtype),
+        "w_down": dense_init(jax.random.fold_in(ks[1], 2), (e, f, d), dtype),
+    }
+    if cfg.gated_ffn:
+        p["w_gate"] = dense_init(ks[1], (e, d, f), dtype)
+    if cfg.n_shared_experts:
+        p["shared"] = ffn_init(ks[2], d, f * cfg.n_shared_experts, dtype, gated=cfg.gated_ffn)
+    return p
+
+
+def _route(p: Params, x: jax.Array, cfg: ArchConfig):
+    """Top-k routing: per-slot expert ids, in-expert positions, gates, aux.
+
+    Returns e_idx, pos, keep, gates — all (B, k·S) slot-major — plus the
+    load-balancing aux loss.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = expert_capacity(s, cfg)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    logits = shard(logits, "batch", "seq", None)  # routing is per-token
+    probs = jax.nn.softmax(logits, axis=-1)  # (B,S,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    # slot-major flattening: slot 0 of every token, then slot 1, …
+    e_idx = gate_idx.transpose(0, 2, 1).reshape(b, k * s)  # (B,kS)
+    gates = gate_vals.transpose(0, 2, 1).reshape(b, k * s)
+    e_idx = shard(e_idx, "batch", None)
+    gates = shard(gates, "batch", None)
+    assign = jax.nn.one_hot(e_idx, e, dtype=jnp.float32)  # (B,kS,E)
+    pos_in_expert = jnp.cumsum(assign, axis=1) - assign  # (B,kS,E)
+    pos = jnp.sum(pos_in_expert * assign, axis=-1).astype(jnp.int32)  # (B,kS)
+    keep = pos < cap
+    # aux loss (Switch/GShard): E · Σ_e frac_tokens_e · mean_prob_e
+    top1 = jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32)
+    frac_tokens = jnp.mean(top1, axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * mean_probs)
+    return e_idx, pos, keep, gates, cap, aux
+
+
+def _dispatch_scatter(x, e_idx, pos, keep, cap, e):
+    """(B,S,D) tokens → (B,E,C,D) expert queues via scatter-add."""
+    b, s, d = x.shape
+    k_s = e_idx.shape[1]
+    k = k_s // s
+    x_rep = jnp.tile(x, (1, k, 1))  # slot-major: (B, kS, D)
+    contrib = jnp.where(keep[..., None], x_rep, 0)
+    contrib = shard(contrib, "batch", "moe_tokens", "embed")  # bf16, slot-sharded
+
+    def per_batch(xb, eb, pb):
+        return jnp.zeros((e, cap, xb.shape[-1]), xb.dtype).at[eb, pb].add(xb)
+
+    return jax.vmap(per_batch)(contrib, e_idx, pos)
+
+
+def _combine_gather(expert_out, e_idx, pos, keep, gates, s):
+    """(B,E,C,D) expert outputs → (B,S,D) via gather + gated sum over k."""
+    b, e, cap, d = expert_out.shape
+    k_s = e_idx.shape[1]
+    k = k_s // s
+
+    def per_batch(ob, eb, pb):
+        return ob[eb, pb]  # (kS, D)
+
+    hit = jax.vmap(per_batch)(expert_out, e_idx, pos)
+    hit = shard(hit, "batch", "moe_tokens", "embed")
+    hit = jnp.where(keep[..., None], hit, 0) * gates[..., None].astype(hit.dtype)
+    return jnp.sum(hit.reshape(b, k, s, d), axis=1)
+
+
+def moe_apply(
+    p: Params, x: jax.Array, cfg: ArchConfig, dispatch_mode: Optional[str] = None
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux_loss scalar)."""
+    import os
+
+    if dispatch_mode is None:
+        dispatch_mode = os.environ.get("REPRO_MOE_DISPATCH", "scatter")
+    b, s, d = x.shape
+    e = cfg.n_experts
+    e_idx, pos, keep, gates, cap, aux = _route(p, x, cfg)
+    if dispatch_mode == "scatter":
+        expert_in = _dispatch_scatter(x, e_idx, pos, keep, cap, e)
+    else:  # einsum oracle (small shapes only)
+        slot_oh = jax.nn.one_hot(pos, cap, dtype=x.dtype) * keep[..., None]
+        disp = jax.nn.one_hot(e_idx, e, dtype=x.dtype)[..., None] * slot_oh[:, :, None, :]
+        x_rep = jnp.tile(x, (1, e_idx.shape[1] // s, 1))
+        expert_in = jnp.einsum("bkec,bkd->becd", disp, x_rep)
+    expert_in = shard(expert_in, "batch", "experts", "expert_cap", "embed")
+    if cfg.gated_ffn:
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", expert_in, p["w_gate"]))
+        h = h * jnp.einsum("becd,edf->becf", expert_in, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", expert_in, p["w_up"]))
+    expert_out = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    expert_out = shard(expert_out, "batch", "experts", "expert_cap", "embed")
+    if dispatch_mode == "scatter":
+        out = _combine_gather(expert_out, e_idx, pos, keep, gates, s)
+    else:
+        comb = disp * gates[:, :, None, None].astype(x.dtype)
+        out = jnp.einsum("bkec,becd->bkd", comb, expert_out)
+        out = jnp.sum(out.reshape(b, -1, s, d), axis=1)
+    if "shared" in p:
+        out = out + ffn_apply(p["shared"], x, gated=cfg.gated_ffn)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,246 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation inside fixed-size chunks, a linear recurrence across chunk
+states (``lax.scan``).  Decode is the O(1)-state recurrent step.  The
+Pallas SSD kernel in :mod:`repro.kernels.ssd_scan` implements the same
+chunk computation for TPU; this module is the reference lowering the
+dry-run compiles (same FLOPs/layout contract).
+
+Layout notes: heads shard over the "model" mesh axis (``ssm_heads``); the
+chunk-state scan carries (B, H, P, N) — inter-chunk traffic is tiny, which
+is why SSMs run the ``long_500k`` cell (O(1) decode state, no KV cache).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..sharding.logical import shard
+from .layers import Params, dense_init, rms_norm
+
+__all__ = ["ssm_init", "ssm_apply", "init_ssm_cache", "ssm_decode", "ssd_chunked"]
+
+
+def _dims(cfg: ArchConfig) -> Tuple[int, int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    n_groups = 1
+    d_state = cfg.ssm_state
+    conv_dim = d_in + 2 * n_groups * d_state
+    return d_in, n_heads, n_groups, d_state, conv_dim
+
+
+def ssm_init(rng: jax.Array, cfg: ArchConfig, dtype) -> Params:
+    d = cfg.d_model
+    d_in, n_heads, n_groups, d_state, conv_dim = _dims(cfg)
+    ks = jax.random.split(rng, 5)
+    # in_proj emits [z, x, B, C, dt]
+    proj_out = 2 * d_in + 2 * n_groups * d_state + n_heads
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((n_heads,), 1e-2))).astype(jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise cumulative sums: out[..., i, j] = sum(a[j+1..i])."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P) pre-discretized inputs (x * dt)
+    a_dt: jax.Array,  # (B, S, H)  A * dt (negative)
+    b: jax.Array,  # (B, S, G, N)
+    c: jax.Array,  # (B, S, G, N)
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> Tuple[jax.Array, jax.Array]:
+    """The SSD chunked algorithm; returns (y (B,S,H,P), final_state)."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    s_orig = s
+    if s % chunk:
+        # pad to a chunk multiple; padded steps are identity on the state
+        # (a_dt = 0 → decay 1, x = B = 0 → no contribution)
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_dt = jnp.pad(a_dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    rep = h // g
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    ac = a_dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    a_cum = jnp.cumsum(ac, axis=2)  # (B,nc,Q,H)
+
+    from ..kernels import ops as _kops
+
+    mode = _kops.kernel_mode()
+    if mode.startswith("pallas"):
+        # TPU hot-spot path: Pallas kernel for steps 1+2 (intra-chunk block)
+        yk, sk = _kops.ssd_chunk_kernel(
+            a_dt.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2),
+            xc.transpose(0, 3, 1, 2, 4),
+            b.reshape(bsz, nc, chunk, g, n).transpose(0, 3, 1, 2, 4),
+            c.reshape(bsz, nc, chunk, g, n).transpose(0, 3, 1, 2, 4),
+            interpret=mode == "pallas-interpret",
+        )
+        y_diag = yk.transpose(0, 2, 3, 1, 4)  # (B,nc,Q,H,P)
+        states = sk.transpose(0, 2, 1, 3, 4).astype(x.dtype)  # (B,nc,H,P,N)
+        cc = jnp.repeat(c.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+    else:
+        bc = jnp.repeat(b.reshape(bsz, nc, chunk, g, n), rep, axis=3)  # (B,nc,Q,H,N)
+        cc = jnp.repeat(c.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+
+        # 1. intra-chunk (the "attention-like" quadratic block)
+        L = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))  # (B,nc,H,Q,Q)
+        y_diag = jnp.einsum(
+            "bclhn,bcshn,bchls,bcshp->bclhp", cc, bc, L.astype(cc.dtype), xc
+        )
+
+        # 2. per-chunk final states
+        decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (B,nc,Q,H)
+        states = jnp.einsum("bcshn,bcsh,bcshp->bchpn", bc, decay_states.astype(bc.dtype), xc)
+
+    # 3. inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # (B,nc,H)
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), x.dtype)
+
+    def step(s_prev, inp):
+        decay, st = inp  # (B,H), (B,H,P,N)
+        s_new = decay[..., None, None].astype(st.dtype) * s_prev + st
+        return s_new, s_prev
+
+    final_state, prev_states = jax.lax.scan(
+        step, init_state, (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4))
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # 4. state → output contribution
+    state_decay = jnp.exp(a_cum)  # (B,nc,Q,H)
+    y_off = jnp.einsum(
+        "bclhn,bchpn,bclh->bclhp", cc, prev_states, state_decay.astype(cc.dtype)
+    )
+    y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :s_orig]
+    return y, final_state
+
+
+def _in_proj_split(p: Params, u: jax.Array, cfg: ArchConfig):
+    d_in, n_heads, n_groups, d_state, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", u, p["in_proj"])
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + conv_dim]
+    dt = zxbcdt[..., d_in + conv_dim :]  # (B,S,H)
+    return z, xbc, dt
+
+
+def _conv_apply(p: Params, xbc: jax.Array, conv_state: Optional[jax.Array], cfg: ArchConfig):
+    """Depthwise causal conv1d over (B,S,conv_dim); returns (out, new_state)."""
+    k = cfg.ssm_conv
+    if conv_state is not None:
+        xbc_full = jnp.concatenate([conv_state, xbc], axis=1)
+    else:
+        xbc_full = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    s = xbc.shape[1]
+    # sum_k w[k] * x[t - (K-1) + k]
+    out = sum(
+        xbc_full[:, i : i + s] * p["conv_w"][i][None, None, :] for i in range(k)
+    )
+    out = jax.nn.silu(out + p["conv_b"])
+    new_state = xbc_full[:, -(k - 1) :] if k > 1 else jnp.zeros_like(xbc[:, :0])
+    return out, new_state
+
+
+def _ssd_inputs(p: Params, xbc: jax.Array, dt: jax.Array, cfg: ArchConfig):
+    d_in, n_heads, n_groups, d_state, _ = _dims(cfg)
+    x = xbc[..., :d_in]
+    b = xbc[..., d_in : d_in + n_groups * d_state]
+    c = xbc[..., d_in + n_groups * d_state :]
+    bsz, s = x.shape[:2]
+    x = x.reshape(bsz, s, n_heads, cfg.ssm_head_dim)
+    b = b.reshape(bsz, s, n_groups, d_state)
+    c = c.reshape(bsz, s, n_groups, d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"])  # (H,)
+    return x, b, c, dt, a
+
+
+def ssm_apply(
+    p: Params,
+    u: jax.Array,
+    cfg: ArchConfig,
+    state: Optional[Params] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Full-sequence SSD pass.  ``state`` (prefill) is populated/returned."""
+    z, xbc, dt = _in_proj_split(p, u, cfg)
+    xbc, conv_state = _conv_apply(p, xbc, None, cfg)
+    x, b, c, dt, a = _ssd_inputs(p, xbc, dt, cfg)
+    x = shard(x, "batch", "seq", "ssm_heads", None)
+    xd = x * dt[..., None].astype(x.dtype)
+    a_dt = a * dt  # (B,S,H)
+    y, final_state = ssd_chunked(xd, a_dt, b, c, cfg.ssm_chunk)
+    y = y + x * p["D"][None, None, :, None].astype(x.dtype)
+    bsz, s = u.shape[:2]
+    y = y.reshape(bsz, s, -1)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_state = None
+    if state is not None:
+        # decode state: final SSM state + last (K-1) pre-activation inputs
+        new_state = {"ssm": final_state.astype(state["ssm"].dtype), "conv": conv_state.astype(state["conv"].dtype)}
+    return out, new_state
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    d_in, n_heads, n_groups, d_state, conv_dim = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, n_heads, cfg.ssm_head_dim, d_state), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_decode(
+    p: Params, u: jax.Array, cfg: ArchConfig, state: Params
+) -> Tuple[jax.Array, Params]:
+    """Single-token recurrent step.  u: (B,1,D)."""
+    d_in, n_heads, n_groups, d_state, conv_dim = _dims(cfg)
+    z, xbc, dt = _in_proj_split(p, u, cfg)
+    # conv over [state ‖ new token]
+    window = jnp.concatenate([state["conv"], xbc], axis=1)  # (B,K,conv_dim)
+    out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    xbc_t = jax.nn.silu(out)[:, None, :]
+    new_conv = window[:, 1:]
+    x, b, c, dt, a = _ssd_inputs(p, xbc_t, dt, cfg)
+    # recurrence: s = exp(a·dt)·s + dt·B ⊗ x
+    decay = jnp.exp(a * dt[:, 0])  # (B,H)
+    bsz = u.shape[0]
+    rep = n_heads // n_groups
+    b1 = jnp.repeat(b[:, 0], rep, axis=1)  # (B,H,N)
+    c1 = jnp.repeat(c[:, 0], rep, axis=1)
+    xd = x[:, 0] * dt[:, 0, :, None].astype(x.dtype)  # (B,H,P)
+    s_new = decay[..., None, None].astype(state["ssm"].dtype) * state["ssm"] + jnp.einsum(
+        "bhp,bhn->bhpn", xd, b1
+    ).astype(state["ssm"].dtype)
+    y = jnp.einsum("bhpn,bhn->bhp", s_new, c1)  # (B,H,P)
+    y = y + x[:, 0] * p["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, 1, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, {"ssm": s_new, "conv": new_conv}

@@ -1,0 +1,93 @@
+"""AdamW + schedules, pure-pytree (no optax dependency).
+
+Optimizer state: fp32 first/second moments per parameter leaf.  With
+``zero=True`` sharding rules the moments shard over the data axis (ZeRO-1)
+— see :mod:`repro.sharding.params`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptHParams", "adamw_init", "adamw_update", "warmup_cosine", "global_norm"]
+
+
+@dataclass(frozen=True)
+class OptHParams:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def variant(self, **kw) -> "OptHParams":
+        return dataclasses.replace(self, **kw)
+
+
+def warmup_cosine(step: jax.Array, hp: OptHParams) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = hp.lr_peak * step / max(hp.warmup_steps, 1)
+    frac = jnp.clip(
+        (step - hp.warmup_steps) / max(hp.total_steps - hp.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = hp.lr_min + 0.5 * (hp.lr_peak - hp.lr_min) * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < hp.warmup_steps, warm, cos)
+
+
+def adamw_init(params: Any) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads: Any,
+    opt_state: Dict[str, Any],
+    params: Any,
+    hp: OptHParams,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, hp.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = warmup_cosine(count, hp)
+    b1, b2 = hp.beta1, hp.beta2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        step = mhat / (jnp.sqrt(vhat) + hp.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            step = step + hp.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["mu"])
+    flat_v = treedef.flatten_up_to(opt_state["nu"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"mu": new_m, "nu": new_v, "count": count}, metrics

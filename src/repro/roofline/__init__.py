@@ -1,0 +1,13 @@
+from .analysis import HW, RooflineCell, analyze_cell, format_table, load_cells, model_flops
+from .hlo_parse import HLOAnalysis, analyze_hlo
+
+__all__ = [
+    "HW",
+    "RooflineCell",
+    "analyze_cell",
+    "format_table",
+    "load_cells",
+    "model_flops",
+    "HLOAnalysis",
+    "analyze_hlo",
+]

@@ -1,0 +1,3 @@
+from .server import InferenceServer, Request, ServeConfig
+
+__all__ = ["InferenceServer", "Request", "ServeConfig"]

@@ -1,0 +1,155 @@
+"""Continuous-batching inference server.
+
+vLLM-style slot scheduler on the JAX decode path: a fixed pool of ``slots``
+shares one ring KV cache; requests arrive asynchronously (any thread may
+submit — the paper's multithreaded-communication model applied to
+serving), prefill fills a free slot, and every engine step decodes ALL
+active slots in one batched ``decode_step``.  Finished sequences free
+their slot immediately; new requests join between steps (continuous
+batching, no head-of-line blocking).
+
+The request queue and completion delivery run on the LCRQ completion
+queues from :mod:`repro.core` — the serving engine is an AMT consumer of
+the paper's runtime, with the engine loop as the progress engine.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core.completion import LCRQueue
+from ..models import decode_step, init_cache, prefill
+
+__all__ = ["ServeConfig", "Request", "InferenceServer"]
+
+
+@dataclass
+class ServeConfig:
+    slots: int = 4  # concurrent sequences (decode batch)
+    context: int = 256  # KV slots per sequence
+    max_prefill: int = 64  # prompt length bucket (padded)
+    greedy: bool = True
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out_tokens: List[int] = field(default_factory=list)
+    done_event: threading.Event = field(default_factory=threading.Event)
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+class InferenceServer:
+    def __init__(self, arch: ArchConfig, params: Any, cfg: ServeConfig = ServeConfig()):
+        self.arch = arch
+        self.params = params
+        self.cfg = cfg
+        self._rid = itertools.count()
+        self.queue = LCRQueue()  # incoming requests (MPMC — any thread)
+        self._slots: List[Optional[Request]] = [None] * cfg.slots
+        self._positions = np.zeros((cfg.slots,), np.int32)
+        self._remaining = np.zeros((cfg.slots,), np.int32)
+        self._last_tok = np.zeros((cfg.slots,), np.int32)
+        # one shared batched cache; per-slot prefill via single-slot caches
+        self.cache = init_cache(arch, cfg.slots, cfg.context)
+        self._prefill_one = jax.jit(
+            lambda p, b, c: prefill(p, arch, b, c), donate_argnums=(2,)
+        )
+        self._decode = jax.jit(
+            lambda p, t, pos, c: decode_step(p, arch, t, pos, c), donate_argnums=(3,)
+        )
+        self.steps = 0
+        self.tokens_out = 0
+
+    # ----------------------------------------------------------------- client
+    def submit(self, prompt: List[int], max_new: int = 16) -> Request:
+        req = Request(rid=next(self._rid), prompt=list(prompt), max_new=max_new)
+        req.submitted_at = time.monotonic()
+        self.queue.push(req)
+        return req
+
+    # ----------------------------------------------------------------- engine
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self._slots) if r is None]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            req = self.queue.pop()
+            if req is None:
+                return
+            self._start(slot, req)
+
+    def _start(self, slot: int, req: Request) -> None:
+        cfg, arch = self.cfg, self.arch
+        prompt = req.prompt[: cfg.max_prefill]
+        toks = np.zeros((1, cfg.max_prefill), np.int32)
+        toks[0, -len(prompt) :] = prompt  # left-pad; ring positions still 0..n
+        # single-sequence prefill on a scratch cache, then splice into slot
+        one = init_cache(arch, 1, cfg.context)
+        batch = {"tokens": jnp.asarray(toks[:, -len(prompt) :])}
+        logits, one = self._prefill_one(self.params, batch, one)
+
+        def splice(full, piece):
+            if full.ndim >= 2 and piece.shape[0] == full.shape[0]:
+                # stacked leading layer dim, batch at axis 1
+                return jax.lax.dynamic_update_slice_in_dim(full, piece, slot, axis=1)
+            return full
+
+        self.cache = jax.tree.map(splice, self.cache, one)
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.out_tokens.append(tok)
+        req.first_token_at = time.monotonic()
+        self._slots[slot] = req
+        self._positions[slot] = len(prompt)
+        self._remaining[slot] = req.max_new - 1
+        self._last_tok[slot] = tok
+        self.tokens_out += 1
+        if req.max_new <= 1:
+            self._finish(slot)
+
+    def _finish(self, slot: int) -> None:
+        req = self._slots[slot]
+        if req is not None:
+            req.finished_at = time.monotonic()
+            req.done_event.set()
+        self._slots[slot] = None
+
+    def step(self) -> bool:
+        """One engine iteration: admit, batched-decode all active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self._slots) if r is not None]
+        if not active:
+            return False
+        toks = jnp.asarray(self._last_tok[:, None])
+        pos = jnp.asarray(self._positions)
+        logits, self.cache = self._decode(self.params, toks, pos, self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        for i in active:
+            self._positions[i] += 1
+            self._remaining[i] -= 1
+            self._last_tok[i] = nxt[i]
+            req = self._slots[i]
+            req.out_tokens.append(int(nxt[i]))
+            self.tokens_out += 1
+            if self._remaining[i] <= 0:
+                self._finish(i)
+        self.steps += 1
+        return True
+
+    def run_until_idle(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.step() and len(self.queue) == 0:
+                if all(r is None for r in self._slots):
+                    return

@@ -1,0 +1,19 @@
+from .logical import (
+    DEFAULT_RULES,
+    ShardingRules,
+    current_rules,
+    logical_spec,
+    named_sharding,
+    shard,
+    use_rules,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "ShardingRules",
+    "current_rules",
+    "logical_spec",
+    "named_sharding",
+    "shard",
+    "use_rules",
+]

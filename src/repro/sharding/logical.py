@@ -1,0 +1,154 @@
+"""Logical-axis sharding: model code names axes, rules map them to the mesh.
+
+Model code annotates activations/params with *logical* axis names
+(``shard(x, "batch", "seq", "embed")``).  A :class:`ShardingRules` table maps
+logical names to mesh axes (or None = replicated).  Outside a rules context
+(CPU smoke tests) the annotations are no-ops, so the same model code runs
+everywhere — the MaxText pattern.
+
+The default rules implement the framework's parallelism layout:
+
+* ``batch``  → (pod, data)   — data parallelism across pods and hosts
+* ``heads/kv_heads/mlp/vocab/experts`` → model — tensor/expert parallelism
+* ``seq_kv`` → data for long-context decode (context parallelism), else None
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "use_rules",
+    "current_rules",
+    "shard",
+    "logical_spec",
+    "named_sharding",
+    "sanitize_spec",
+    "axis_size",
+]
+
+
+class ShardingRules:
+    """Mapping: logical axis name → mesh axis (str/tuple) or None."""
+
+    def __init__(self, table: Dict[str, Optional[object]], mesh: Optional[Mesh] = None):
+        self.table = dict(table)
+        self.mesh = mesh
+
+    def spec(self, *names: Optional[str]) -> P:
+        out = []
+        used = set()
+        for n in names:
+            axis = self.table.get(n) if n is not None else None
+            # one mesh axis may shard only one tensor dim
+            if axis is not None:
+                key = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+                if any(k in used for k in key):
+                    axis = None
+                else:
+                    used.update(key)
+            out.append(axis)
+        return P(*out)
+
+    def with_overrides(self, **kw) -> "ShardingRules":
+        t = dict(self.table)
+        t.update(kw)
+        return ShardingRules(t, self.mesh)
+
+
+DEFAULT_TABLE: Dict[str, Optional[object]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_act": None,  # sequence parallelism inside attention (set to
+    # "model" when head counts don't divide the TP axis — §Perf)
+    "seq_kv": None,  # long-context decode flips this to "data"
+    "embed": None,
+    "embed_model": "model",  # ffn/attn input dim when 2D-sharding params
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": None,
+    # §Perf iteration 3 (refuted): co-sharding dispatch slots with experts
+    # ("moe_tokens": "model") doubled collective volume — GSPMD inserts
+    # all-gathers to undo it.  Kept as an override hook; default off.
+    "moe_tokens": None,
+    "head_dim": None,
+    "state": None,
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+    "frames": None,
+    "latent": None,
+    "window": None,
+    "conv": None,
+    "stage": None,  # pipeline stages (optional PP mode)
+}
+
+DEFAULT_RULES = ShardingRules(DEFAULT_TABLE)
+
+_ctx = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules):
+    prev = getattr(_ctx, "rules", None)
+    _ctx.rules = rules
+    try:
+        yield rules
+    finally:
+        _ctx.rules = prev
+
+
+def logical_spec(*names: Optional[str]) -> P:
+    rules = current_rules()
+    if rules is None:
+        return P(*([None] * len(names)))
+    return rules.spec(*names)
+
+
+def axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape.get(a, 1)
+        return n
+    return mesh.shape.get(entry, 1)
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec entries whose mesh-axis size does not divide the dim —
+    XLA input shardings require exact divisibility; non-divisible dims
+    replicate (e.g. 28 query heads or 4 KV heads on a 16-way model axis)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, e in zip(shape, entries):
+        out.append(e if (e is None or (dim % axis_size(mesh, e) == 0 and dim > 0)) else None)
+    return P(*out)
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with the mesh sharding for the given logical axes.
+    No-op outside a rules context (single-device tests)."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = sanitize_spec(rules.spec(*names), x.shape, rules.mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *names: Optional[str], rules: Optional[ShardingRules] = None) -> NamedSharding:
+    r = rules or current_rules() or DEFAULT_RULES
+    return NamedSharding(mesh, r.spec(*names))

@@ -1,0 +1,201 @@
+"""PartitionSpec derivation for parameter / optimizer / cache pytrees.
+
+Leaf specs are matched by leaf *name* on the trailing dimensions (stacked
+per-layer params have a leading layer dim that is never sharded), then
+resolved through the active :class:`ShardingRules`, so the same table
+drives single-pod, multi-pod, and test meshes.
+
+SSM projection matrices stay replicated in the baseline layout (their
+fused [z‖x‖B‖C‖dt] output dim does not shard cleanly — see DESIGN.md;
+revisited in §Perf).  Optimizer moments optionally ZeRO-shard over the
+data axis: the first free dimension divisible by the data-axis size gets
+"data" appended to its spec.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .logical import ShardingRules, sanitize_spec
+
+__all__ = ["param_specs", "opt_specs", "batch_specs", "cache_specs", "tree_shardings"]
+
+# leaf name → logical axes of the *trailing* dims
+_LEAF_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "embed": ("vocab", "embed"),
+    "lm_head": ("vocab", "embed"),
+    "wq": ("embed", "heads", "head_dim"),
+    "wk": ("embed", "kv_heads", "head_dim"),
+    "wv": ("embed", "kv_heads", "head_dim"),
+    "wo": ("heads", "head_dim", "embed"),
+    "bq": ("heads", "head_dim"),
+    "bk": ("kv_heads", "head_dim"),
+    "bv": ("kv_heads", "head_dim"),
+    "w_gate": ("embed", "mlp"),
+    "w_up": ("embed", "mlp"),
+    "w_down": ("mlp", "embed"),
+    "router": ("embed", "experts"),
+    # MLA
+    "wq_a": ("embed", "latent"),
+    "wq_b": ("latent", "heads", "head_dim"),
+    "wkv_a": ("embed", "latent"),
+    "wk_b": ("latent", "heads", "head_dim"),
+    "wv_b": ("latent", "heads", "head_dim"),
+    # SSM (baseline: replicated projections — see module docstring)
+    "in_proj": ("embed", None),
+    "conv_w": (None, None),
+    "conv_b": (None,),
+    "A_log": (None,),
+    "D": (None,),
+    "dt_bias": (None,),
+    "norm_w": (None,),
+    "out_proj": (None, "embed"),
+    # norms
+    "ln1": ("embed",),
+    "ln2": ("embed",),
+    "ln": ("embed",),
+    "ln_f": ("embed",),
+    "enc_ln_f": ("embed",),
+}
+
+# MoE expert stacks: (E, D, F)/(E, F, D) keyed by path containing "moe"
+_MOE_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "w_gate": ("experts", "embed", "mlp"),
+    "w_up": ("experts", "embed", "mlp"),
+    "w_down": ("experts", "mlp", "embed"),
+}
+
+
+def _leaf_spec(path, leaf, rules: ShardingRules) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf_name = names[-1]
+    in_moe = "moe" in names and "shared" not in names
+    table = _MOE_RULES if (in_moe and leaf_name in _MOE_RULES) else _LEAF_RULES
+    logical = table.get(leaf_name)
+    if logical is None:
+        return P()  # unknown leaf: replicate
+    ndim = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    pad = ndim - len(logical)
+    full = (None,) * pad + tuple(logical)
+    return rules.spec(*full)
+
+
+def param_specs(params: Any, rules: ShardingRules) -> Any:
+    return jax.tree_util.tree_map_with_path(lambda p, l: _leaf_spec(p, l, rules), params)
+
+
+def _zero_extend(spec: P, shape, data_axes, mesh: Mesh) -> P:
+    """ZeRO-1: shard the first free, divisible dim of an optimizer moment
+    over the data axes."""
+    dsize = 1
+    for a in data_axes:
+        if a in mesh.shape:
+            dsize *= mesh.shape[a]
+    if dsize <= 1:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        if e is None:
+            continue
+        for a in e if isinstance(e, tuple) else (e,):
+            used.add(a)
+    if any(a in used for a in data_axes):
+        return spec
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dsize == 0 and dim > 0:
+            entries[i] = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+            return P(*entries)
+    return spec
+
+
+def opt_specs(
+    opt_state: Any,
+    params: Any,
+    rules: ShardingRules,
+    zero: bool = True,
+    mesh: Optional[Mesh] = None,
+) -> Any:
+    """Moment specs = param specs, optionally ZeRO-extended over data."""
+    pspecs = param_specs(params, rules)
+    data_axes = rules.table.get("batch") or ()
+    if isinstance(data_axes, str):
+        data_axes = (data_axes,)
+
+    def mom_specs(moments):
+        if not (zero and mesh is not None and data_axes):
+            return pspecs
+        return jax.tree.map(
+            lambda s, l: _zero_extend(s, l.shape, tuple(data_axes), mesh), pspecs, moments
+        )
+
+    return {
+        "mu": mom_specs(opt_state["mu"]),
+        "nu": mom_specs(opt_state["nu"]),
+        "count": P(),
+    }
+
+
+def batch_specs(batch: Any, rules: ShardingRules) -> Any:
+    def leaf(path, x):
+        names = [getattr(k, "key", str(k)) for k in path]
+        n = names[-1]
+        nd = len(x.shape)
+        if n == "positions":
+            return rules.spec("batch")
+        if n in ("prefix", "frames"):
+            return rules.spec("batch", "seq", "embed")
+        if nd == 2:
+            return rules.spec("batch", "seq")
+        if nd == 1:
+            return rules.spec("batch")
+        return rules.spec(*(["batch"] + [None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch)
+
+
+def cache_specs(cache: Any, rules: ShardingRules) -> Any:
+    """Decode-cache specs: (L, B, S, KV, hd) KV rings, (L, B, H, P, N) SSM
+    states, (L, B, K, C) conv states, (L, B, S) position tags."""
+
+    def leaf(path, x):
+        names = [getattr(k, "key", str(k)) for k in path]
+        nd = len(x.shape)
+        last = names[-1]
+        # a batch dim of 1 (single-request long-context decode) must not
+        # claim the data axes in spec dedup — it cannot shard, and letting
+        # it win would starve seq_kv of those axes (the 500k cache would
+        # silently replicate: caught by the §Perf HLO audit)
+        batch = "batch" if (nd >= 2 and x.shape[1] > 1) else None
+        if last in ("k", "v"):
+            return rules.spec(None, batch, "seq_kv", "kv_heads", "head_dim")
+        if last == "pos":
+            return rules.spec(None, batch, "seq_kv")
+        if last == "c_kv":
+            return rules.spec(None, batch, "seq_kv", "latent")
+        if last == "k_rope":
+            return rules.spec(None, batch, "seq_kv", None)
+        if last == "ssm":
+            return rules.spec(None, batch, "ssm_heads", None, None)
+        if last == "conv":
+            return rules.spec(None, batch, None, None)
+        return rules.spec(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def tree_shardings(mesh: Mesh, spec_tree: Any, shape_tree: Any = None) -> Any:
+    """Specs → NamedShardings; with ``shape_tree`` each spec is sanitized
+    against the leaf shape (input shardings need exact divisibility)."""
+    if shape_tree is None:
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), spec_tree, is_leaf=lambda s: isinstance(s, P)
+        )
+    return jax.tree.map(
+        lambda s, l: NamedSharding(mesh, sanitize_spec(s, l.shape, mesh)),
+        spec_tree,
+        shape_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )

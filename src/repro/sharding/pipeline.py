@@ -1,0 +1,83 @@
+"""GPipe-style pipeline parallelism over a mesh axis (shard_map + ppermute).
+
+Completes the parallelism matrix (DP/TP/EP/SP + **PP**): stage ``s`` on
+device ``s`` along ``axis`` holds its slice of the stacked stage params;
+microbatches stream through the classic GPipe schedule (stage s computes
+microbatch m at step ``t = s + m``), activations hop stage→stage with
+``lax.ppermute`` — XLA lowers these to one-sided ICI DMA hand-offs, the
+LCI *dynamic put* analogue on the device fabric (DESIGN.md §2.3).
+
+The multi-pod production mesh can run its "pod" axis as pipeline stages
+instead of data parallelism when model depth × width exceeds one pod's
+HBM: ``gpipe(stage_fn, params, micro_x, mesh, axis="pod")``.
+
+Bubble fraction = (n_stages − 1) / (n_stages + n_micro − 1); choose
+``n_micro ≫ n_stages`` as usual.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+__all__ = ["gpipe"]
+
+
+def gpipe(
+    stage_fn: Callable,
+    stacked_params,
+    micro_x: jax.Array,  # (M, ...) microbatches, identical in/out shape
+    mesh: Mesh,
+    axis: str = "pod",
+) -> jax.Array:
+    """Apply ``n_stages`` stages sequentially to each of M microbatches.
+
+    ``stacked_params``: pytree with leading dim = n_stages (sharded over
+    ``axis``); ``stage_fn(params_slice, x) -> x`` must preserve shape.
+    Returns (M, ...) outputs, replicated along ``axis``.
+    """
+    n = mesh.shape[axis]
+    m_count = micro_x.shape[0]
+    steps = n + m_count - 1
+
+    p_specs = jax.tree.map(lambda _: P(axis), stacked_params)
+
+    @partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(p_specs, P()),
+        out_specs=P(),
+        check_rep=False,
+    )
+    def run(params_local, xs):
+        # params_local: leading dim 1 (this stage's slice)
+        p_here = jax.tree.map(lambda a: a[0], params_local)
+        s = jax.lax.axis_index(axis)
+        zero = jnp.zeros_like(xs[0])
+
+        def step(buf, t):
+            m = t - s
+            active = (m >= 0) & (m < m_count)
+            # stage 0 pulls a fresh microbatch; others use the handed-off buf
+            fresh = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(m, 0, m_count - 1), axis=0, keepdims=False
+            )
+            inp = jnp.where(s == 0, fresh, buf)
+            out = stage_fn(p_here, inp)
+            out = jnp.where(active, out, zero)
+            # hand off to the next stage (one-sided DMA on ICI)
+            nxt = jax.lax.ppermute(out, axis, [(i, i + 1) for i in range(n - 1)])
+            emit = jnp.where(s == n - 1, out, zero)
+            return nxt, emit
+
+        _, emits = jax.lax.scan(step, zero, jnp.arange(steps))
+        # the last stage emits microbatch m at step m + n - 1
+        outs = jax.lax.dynamic_slice_in_dim(emits, n - 1, m_count, axis=0)
+        # replicate the result across stages (only stage n-1 holds it)
+        return jax.lax.psum(outs, axis)
+
+    return run(stacked_params, micro_x)

@@ -1,0 +1,135 @@
+"""DES simulator: determinism + the paper's qualitative orderings."""
+import pytest
+
+from repro.amtsim.costs import DELTA, EXPANSE
+from repro.amtsim.des import Acquire, Env, Lock, Store, Timeout
+from repro.amtsim.workloads import chains, flood, octotiger
+
+
+# ------------------------------------------------------------------- kernel
+def test_des_timeout_ordering():
+    env = Env()
+    log = []
+
+    def proc(name, dt):
+        yield Timeout(dt)
+        log.append((env.now, name))
+
+    env.process(proc("b", 2e-6))
+    env.process(proc("a", 1e-6))
+    env.run()
+    assert [n for _, n in log] == ["a", "b"]
+
+
+def test_des_lock_fifo():
+    env = Env()
+    order = []
+
+    def proc(name):
+        yield Acquire(lock)
+        yield Timeout(1e-6)
+        order.append(name)
+        lock.release()
+
+    lock = Lock(env)
+    for n in ("p0", "p1", "p2"):
+        env.process(proc(n))
+    env.run()
+    assert order == ["p0", "p1", "p2"]
+    assert lock.contentions == 2
+
+
+def test_des_store():
+    env = Env()
+    got = []
+
+    def consumer():
+        from repro.amtsim.des import Get
+
+        item = yield Get(store)
+        got.append(item)
+
+    store = Store(env)
+    env.process(consumer())
+    store.put("x")
+    env.run()
+    assert got == ["x"]
+
+
+# ---------------------------------------------------------------- workloads
+def test_flood_deterministic():
+    r1 = flood("lci", msg_size=8, nthreads=8, nmsgs=500)
+    r2 = flood("lci", msg_size=8, nthreads=8, nmsgs=500)
+    assert r1.elapsed == r2.elapsed and r1.messages == r2.messages
+
+
+def test_flood_orderings_small_msgs():
+    """Paper Fig 3a qualitative: lci > mpi_a > mpi at 8 B."""
+    rates = {v: flood(v, msg_size=8, nthreads=32, nmsgs=2000).rate for v in ("lci", "mpi", "mpi_a")}
+    assert rates["lci"] > rates["mpi_a"] > rates["mpi"]
+
+
+def test_flood_orderings_large_msgs():
+    """Paper §4.2: zero-copy chunks cannot be combined, so aggregation's
+    large-message gain collapses relative to its small-message gain (the
+    *ordering* mpi_a < mpi on Expanse is not reproduced by the cost model
+    — documented in EXPERIMENTS.md §Paper-validation)."""
+    small = {v: flood(v, msg_size=8, nthreads=32, nmsgs=2000).rate for v in ("mpi", "mpi_a")}
+    large = {v: flood(v, msg_size=16384, nthreads=32, nmsgs=1000).rate for v in ("lci", "mpi", "mpi_a")}
+    assert large["lci"] > large["mpi_a"] and large["lci"] > large["mpi"]
+    gain_small = small["mpi_a"] / small["mpi"]
+    gain_large = large["mpi_a"] / large["mpi"]
+    assert gain_large < 0.5 * gain_small  # aggregation helps large messages far less
+
+
+def test_latency_ordering():
+    lat = {v: chains(v, msg_size=8, nchains=8, nsteps=20, nthreads=8).elapsed for v in ("lci", "mpi")}
+    assert lat["lci"] < lat["mpi"]
+
+
+def test_factor_study_multithreading_ladder():
+    """Fig 8: block ≲ try ≲ try_progress ≲ lci on the flood microbenchmark."""
+    rates = {
+        v: flood(v, msg_size=8, nthreads=32, nmsgs=1500).rate
+        for v in ("block", "try_progress", "lci")
+    }
+    assert rates["lci"] >= rates["try_progress"] >= rates["block"]
+
+
+def test_device_scaling_monotone():
+    """Fig 9: more devices → higher message rate (lockless family)."""
+    r1 = flood("lci_d1", msg_size=8, nthreads=32, nmsgs=2000).rate
+    r4 = flood("lci_d4", msg_size=8, nthreads=32, nmsgs=2000).rate
+    assert r4 > r1 * 1.5
+
+
+def test_octotiger_lci_beats_mpi():
+    e = {}
+    for v in ("lci", "mpi"):
+        e[v] = octotiger(v, n_nodes=4, workers=8, total_subgrids=256, timesteps=3).elapsed
+    assert e["lci"] < e["mpi"]
+
+
+def test_slingshot_lock_penalty():
+    """Fig 5: Delta's libfabric CQ lock lowers peak message rate vs Expanse."""
+    r_exp = flood("lci", msg_size=8, nthreads=32, nmsgs=1500, platform=EXPANSE).rate
+    r_delta = flood("lci", msg_size=8, nthreads=32, nmsgs=1500, platform=DELTA).rate
+    assert r_delta < r_exp
+
+
+def test_dedicated_progress_cores_not_justified():
+    """Paper §3.3.4: 'we have not found sufficient evidence to justify'
+    dedicated progress cores.  Reproduced: with a lock-free runtime they
+    give no microbenchmark gain and cost the application compute cores."""
+    import dataclasses
+
+    from repro.amtsim.parcelport_sim import sim_config_for_variant
+
+    base = sim_config_for_variant("lci")
+    with_pw = dataclasses.replace(base, name="lci_pw4", progress_workers=4)
+    r0 = flood(base, msg_size=8, nthreads=32, nmsgs=2000)
+    r4 = flood(with_pw, msg_size=8, nthreads=32, nmsgs=2000)
+    assert r4.rate < r0.rate * 1.1  # no meaningful gain
+    a0 = octotiger(base, n_nodes=4, workers=8, total_subgrids=256, timesteps=3)
+    a4 = octotiger(with_pw, n_nodes=4, workers=8, total_subgrids=256, timesteps=3)
+    assert a4.elapsed > a0.elapsed  # reserved cores hurt the application

@@ -1,0 +1,145 @@
+"""Checkpointing (async, atomic, elastic) + deterministic data pipeline."""
+import json
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import SMOKES
+from repro.core.executor import AMTExecutor
+from repro.data import PrefetchingLoader, SyntheticLM
+
+
+def small_state(rng=0):
+    k = jax.random.PRNGKey(rng)
+    return {
+        "params": {
+            "w": jax.random.normal(k, (8, 16), jnp.float32),
+            "e": jax.random.normal(k, (32, 8)).astype(jnp.bfloat16),
+        },
+        "opt": {"mu": {"w": jnp.zeros((8, 16))}, "count": jnp.zeros((), jnp.int32)},
+        "step": jnp.asarray(5, jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip_sync(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    state = small_state()
+    cm.save(state, step=5)
+    abstract = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+    restored, step = cm.restore(abstract)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_async_save_with_executor(tmp_path):
+    ex = AMTExecutor(n_workers=2)
+    try:
+        cm = CheckpointManager(str(tmp_path), executor=ex)
+        state = small_state()
+        cm.save(state, step=1)
+        cm.wait()
+        assert cm.latest_step() == 1
+    finally:
+        ex.shutdown()
+
+
+def test_atomic_commit_no_partial(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(small_state(), step=2)
+    # a stale tmp dir must never be listed
+    (tmp_path / "step_9.tmp").mkdir()
+    assert cm.available_steps() == [2]
+
+
+def test_keep_k_gc(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        cm.save(small_state(), step=s)
+    assert cm.available_steps() == [3, 4]
+
+
+def test_restore_validates_shapes(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    cm.save(small_state(), step=1)
+    bad = small_state()
+    bad["params"]["w"] = jnp.zeros((9, 16))
+    abstract = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), bad)
+    with pytest.raises(ValueError, match="shape"):
+        cm.restore(abstract)
+
+
+def test_elastic_restore_across_meshes(tmp_path):
+    """Save under one sharding, restore under another (subprocess with 8
+    host devices) — the elastic-rescale contract."""
+    import subprocess
+    import sys
+
+    script = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import CheckpointManager
+
+state = {{"w": jnp.arange(64.0).reshape(8, 8)}}
+mesh_a = jax.make_mesh((4,), ("x",))
+sh_a = NamedSharding(mesh_a, P("x", None))
+state = {{"w": jax.device_put(state["w"], sh_a)}}
+cm = CheckpointManager({str(tmp_path)!r})
+cm.save(state, step=1)
+
+mesh_b = jax.make_mesh((2, 4), ("a", "b"))
+sh_b = {{"w": NamedSharding(mesh_b, P("a", "b"))}}
+abstract = {{"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
+restored, step = cm.restore(abstract, shardings=sh_b)
+assert step == 1
+np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(64.0).reshape(8, 8))
+assert restored["w"].sharding == sh_b["w"]
+print("ELASTIC_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True, text=True, env=env, timeout=120)
+    assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]
+
+
+# ----------------------------------------------------------------- data
+def test_data_determinism_and_resume():
+    cfg = SMOKES["tinyllama-1.1b"]
+    src = SyntheticLM(cfg, batch=2, seq=16, seed=42)
+    b0a, b0b = src.make_batch(0), src.make_batch(0)
+    np.testing.assert_array_equal(b0a["tokens"], b0b["tokens"])
+    assert not np.array_equal(src.make_batch(1)["tokens"], b0a["tokens"])
+    assert (b0a["labels"][:, :-1] == b0a["tokens"][:, 1:]).all()
+
+
+def test_prefetching_loader_in_order():
+    cfg = SMOKES["tinyllama-1.1b"]
+    ex = AMTExecutor(n_workers=2)
+    try:
+        src = SyntheticLM(cfg, batch=2, seq=16, seed=7)
+        loader = PrefetchingLoader(src, ex, depth=3)
+        got = [loader.next() for _ in range(6)]
+        for i, b in enumerate(got):
+            np.testing.assert_array_equal(b["tokens"], src.make_batch(i)["tokens"])
+    finally:
+        ex.shutdown()
+
+
+def test_prefetching_loader_restart_index():
+    cfg = SMOKES["tinyllama-1.1b"]
+    ex = AMTExecutor(n_workers=2)
+    try:
+        src = SyntheticLM(cfg, batch=2, seq=16, seed=7)
+        loader = PrefetchingLoader(src, ex, depth=2, start_index=10)
+        b = loader.next()
+        np.testing.assert_array_equal(b["tokens"], src.make_batch(10)["tokens"])
+    finally:
+        ex.shutdown()

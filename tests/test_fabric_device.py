@@ -1,0 +1,96 @@
+"""Native-layer semantics: RNR + retry, one-sided put, tag matching."""
+import pytest
+
+from repro.core.completion import LCRQueue, Synchronizer
+from repro.core.device import LCIDevice, LockMode
+from repro.core.fabric import Fabric
+
+
+def mk_pair(devices_per_rank=1, lock_mode=LockMode.NONE):
+    fab = Fabric(2, devices_per_rank=devices_per_rank)
+    cq0, cq1 = LCRQueue(), LCRQueue()
+    d0 = LCIDevice(fab.device(0, 0), lock_mode=lock_mode, put_target_comp=cq0)
+    d1 = LCIDevice(fab.device(1, 0), lock_mode=lock_mode, put_target_comp=cq1)
+    return fab, d0, d1, cq0, cq1
+
+
+def drain(*devs, rounds=50):
+    for _ in range(rounds):
+        moved = False
+        for d in devs:
+            if d.progress():
+                moved = True
+        if not moved:
+            return
+
+
+def test_rnr_retry_semantics():
+    """Two-sided send with no remote posted receive RNRs, then retries."""
+    fab = Fabric(2, devices_per_rank=1, recv_slots=0)
+    # raw fabric: no prepost (LCIDevice preposts; use NetDevice directly)
+    nd0, nd1 = fab.device(0), fab.device(1)
+    nd0.post_send(1, 0, b"hello")
+    assert fab.stats.rnr_events == 1
+    assert nd1.cq_depth() == 0
+    nd1.post_recv()
+    assert nd0.hw_progress()  # retry succeeds now
+    comps = nd1.poll_cq()
+    assert len(comps) == 1 and comps[0].data == b"hello"
+
+
+def test_put_dynamic_no_receive_needed():
+    fab, d0, d1, cq0, cq1 = mk_pair()
+    sent = Synchronizer()
+    d0.put_dynamic(1, 0, b"payload", sent)
+    drain(d0, d1)
+    rec = cq1.pop()
+    assert rec is not None and rec.op == "put_recv" and rec.data == b"payload"
+    assert sent.test() is not None  # local send completion
+
+
+def test_tag_matching_and_any_source():
+    fab, d0, d1, cq0, cq1 = mk_pair()
+    got = LCRQueue()
+    d1.post_recv(src_rank=0, tag=7, comp=got)
+    d0.post_send(1, 0, tag=7, data=b"tagged", comp=Synchronizer())
+    drain(d0, d1)
+    rec = got.pop()
+    assert rec.op == "recv" and rec.tag == 7 and rec.data == b"tagged"
+    # any-source
+    got2 = LCRQueue()
+    d1.post_recv(src_rank=-1, tag=9, comp=got2)
+    d0.post_send(1, 0, tag=9, data=b"any", comp=Synchronizer())
+    drain(d0, d1)
+    assert got2.pop().data == b"any"
+
+
+def test_unexpected_message_queue():
+    """Send arrives before the receive is posted: matched on post."""
+    fab, d0, d1, cq0, cq1 = mk_pair()
+    d0.post_send(1, 0, tag=3, data=b"early", comp=Synchronizer())
+    drain(d0, d1)
+    got = LCRQueue()
+    d1.post_recv(src_rank=0, tag=3, comp=got)
+    rec = got.pop()
+    assert rec is not None and rec.data == b"early"
+
+
+def test_try_lock_progress_contention():
+    fab, d0, d1, cq0, cq1 = mk_pair(lock_mode=LockMode.TRY)
+    d0._coarse.acquire()  # simulate a holder
+    assert d0.progress() is False  # try-lock gives up
+    assert d0.lock_failures >= 1
+    d0._coarse.release()
+    d0.progress()  # now fine
+
+
+def test_multi_device_isolation():
+    fab = Fabric(2, devices_per_rank=2)
+    cq = LCRQueue()
+    send_dev = LCIDevice(fab.device(0, 1), put_target_comp=None)
+    recv_dev = LCIDevice(fab.device(1, 1), put_target_comp=cq)
+    other = LCIDevice(fab.device(1, 0), put_target_comp=LCRQueue())
+    send_dev.put_dynamic(1, 1, b"dev1", Synchronizer())
+    drain(send_dev, recv_dev, other)
+    assert cq.pop().data == b"dev1"
+    assert other.put_target_comp.pop() is None  # landed on the right device

@@ -1,0 +1,76 @@
+"""Parcel serialization: roundtrip, zero-copy threshold, aggregation."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.parcel import (
+    Chunk,
+    Parcel,
+    decode_header,
+    encode_header,
+    deserialize_action,
+    serialize_action,
+    zc_sizes_from_nzc,
+)
+from repro.core.parcelport import aggregate_parcels, is_aggregate, split_aggregate
+
+
+def mk(pid, args, threshold=256):
+    return serialize_action(pid, 0, 1, "act", args, zero_copy_threshold=threshold)
+
+
+def test_roundtrip_small_args():
+    p = mk(1, (b"abc", b"d" * 10))
+    action, args = deserialize_action(p)
+    assert action == "act"
+    assert args == [b"abc", b"d" * 10]
+    assert p.num_zc == 0  # all below threshold
+
+
+def test_zero_copy_threshold():
+    big = b"x" * 1000
+    p = mk(2, (b"small", big), threshold=256)
+    assert p.num_zc == 1
+    assert p.zc_chunks[0].size == 1000
+    action, args = deserialize_action(p)
+    assert args == [b"small", big]
+
+
+def test_zc_sizes_from_nzc():
+    p = mk(3, (b"a" * 500, b"b" * 700), threshold=256)
+    sizes = zc_sizes_from_nzc(p.nzc_chunk.data)
+    assert tuple(sizes) == (500, 700)
+
+
+def test_header_roundtrip():
+    p = mk(4, (b"y" * 5000,), threshold=256)
+    hdr = encode_header(p, device_index=3)
+    h = decode_header(hdr)
+    assert h.num_followups >= 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(st.binary(min_size=0, max_size=2048), min_size=1, max_size=5),
+    st.integers(min_value=16, max_value=1024),
+)
+def test_roundtrip_property(args, threshold):
+    p = serialize_action(7, 0, 1, "a", tuple(args), zero_copy_threshold=threshold)
+    action, out = deserialize_action(p)
+    assert out == list(args)
+    for a in args:
+        if len(a) > threshold:
+            assert any(c.size == len(a) for c in p.zc_chunks)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.binary(min_size=1, max_size=512), min_size=1, max_size=8))
+def test_aggregation_roundtrip(payloads):
+    parcels = [mk(10 + i, (pl,)) for i, pl in enumerate(payloads)]
+    agg = aggregate_parcels(parcels)
+    assert is_aggregate(agg)
+    back = split_aggregate(agg)
+    assert len(back) == len(parcels)
+    for orig, got in zip(parcels, back):
+        a1, args1 = deserialize_action(orig)
+        a2, args2 = deserialize_action(got)
+        assert (a1, args1) == (a2, args2)

@@ -1,0 +1,119 @@
+"""Sharding rules/specs + roofline HLO analysis."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SMOKES, get_config
+from repro.models import init_params
+from repro.roofline.analysis import decode_min_bytes, model_flops
+from repro.roofline.hlo_parse import analyze_hlo
+from repro.sharding.logical import ShardingRules, sanitize_spec
+from repro.sharding.params import _zero_extend, batch_specs, param_specs
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_rules_dedup_axes():
+    r = ShardingRules({"a": "model", "b": "model", "c": ("data", "model")})
+    assert r.spec("a", "b") == P("model", None)  # one axis, one dim
+    assert r.spec("c", "a") == P(("data", "model"), None)
+
+
+def test_sanitize_divisibility():
+    mesh = FakeMesh({"data": 4, "model": 8})
+    spec = P("data", "model", None)
+    assert sanitize_spec(spec, (8, 16, 3), mesh) == P("data", "model", None)
+    assert sanitize_spec(spec, (6, 16, 3), mesh) == P(None, "model", None)
+    assert sanitize_spec(P(("data", "model")), (32,), mesh) == P(("data", "model"))
+    assert sanitize_spec(P(("data", "model")), (12,), mesh) == P(None)
+
+
+def test_zero_extend_moments():
+    mesh = FakeMesh({"data": 4, "model": 8})
+    # free dim 0 divisible by data → gets it
+    assert _zero_extend(P(None, "model"), (8, 16), ("data",), mesh) == P("data", "model")
+    # nothing divisible → unchanged
+    assert _zero_extend(P(None,), (7,), ("data",), mesh) == P(None)
+    # already data-sharded → unchanged
+    assert _zero_extend(P("data",), (8,), ("data",), mesh) == P("data")
+
+
+@pytest.mark.parametrize("name", ["qwen2-7b", "deepseek-moe-16b", "mamba2-130m", "whisper-large-v3"])
+def test_param_specs_cover_tree(name):
+    cfg = SMOKES[name]
+    params = jax.eval_shape(lambda r: init_params(r, cfg), jax.random.PRNGKey(0))
+    rules = ShardingRules({"vocab": "model", "heads": "model", "mlp": "model",
+                           "experts": "model", "embed": None, "kv_heads": "model",
+                           "head_dim": None, "latent": None})
+    specs = param_specs(params, rules)
+    flat = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    assert len(flat) == len(jax.tree.leaves(params))
+    # embedding must be vocab-sharded
+    assert specs["embed"] == P("model", None)
+
+
+def test_batch_specs():
+    rules = ShardingRules({"batch": ("pod", "data"), "seq": None, "embed": None})
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+        "positions": jax.ShapeDtypeStruct((8,), jnp.int32),
+        "frames": jax.ShapeDtypeStruct((8, 10, 4), jnp.float32),
+    }
+    specs = batch_specs(batch, rules)
+    assert specs["tokens"] == P(("pod", "data"), None)
+    assert specs["positions"] == P(("pod", "data"))
+    assert specs["frames"] == P(("pod", "data"), None, None)
+
+
+# ------------------------------------------------------------------ roofline
+SYNTH_HLO = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %ar = f32[8,8]{1,0} all-reduce(%gte), replica_groups={}, to_apply=%add
+  %d = f32[8,8]{1,0} dot(%ar, %ar), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,8]) tuple(%c, %d)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  ROOT %cmp = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %ag = f32[16,8]{1,0} all-gather(%a), dimensions={0}
+  ROOT %r = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_parse_loop_multipliers():
+    a = analyze_hlo(SYNTH_HLO)
+    assert a.while_trip_counts == {"body": 5}
+    # all-reduce inside the ×5 body: 8·8·4 B × 5; all-gather outside: 16·8·4
+    assert a.collective_bytes["all-reduce"] == 8 * 8 * 4 * 5
+    assert a.collective_bytes["all-gather"] == 16 * 8 * 4
+    # dot: 2·(8·8)·8 flops × 5
+    assert a.dot_flops == 2 * 64 * 8 * 5
+
+
+def test_model_flops_shapes():
+    mf_train = model_flops("tinyllama-1.1b", "train_4k")
+    n = get_config("tinyllama-1.1b").param_count()
+    assert abs(mf_train - 6 * n * 4096 * 256) / mf_train < 1e-6
+    assert model_flops("tinyllama-1.1b", "decode_32k") == 2 * n * 128
+
+
+def test_decode_min_bytes_sane():
+    b_full = decode_min_bytes("qwen2-7b", "decode_32k")
+    # params (2·7.6e9) + 28L·128B·32k·4kv·128hd·2·2B ≈ 15.2e9 + 240e9
+    assert 2e11 < b_full < 3e11
+    b_swa = decode_min_bytes("h2o-danube-3-4b", "decode_32k")
+    assert b_swa < b_full  # window cache ≪ full cache
