@@ -1,6 +1,15 @@
 """Run every benchmark (one per paper table/figure + the roofline report).
 
-``python -m benchmarks.run [--fast] [--only name1,name2]``
+``python -m benchmarks.run [--fast] [--only name1,name2] [--smoke]``
+
+``--smoke`` runs a tiny deterministic protocol-regression gate instead of
+the full suite: every parcelport variant must deliver a mixed-size payload
+set and quiesce (bounded drain — a deadlock or lost parcel fails the run),
+the bounded-injection fabric must exercise backpressure and still deliver,
+the eager path must use strictly fewer fabric messages than rendezvous for
+sub-threshold parcels, and a small DES flood must complete on the main
+variants.  Results land in ``experiments/bench/smoke.json`` (the CI
+artifact) and the exit code is non-zero on any failure.
 """
 from __future__ import annotations
 
@@ -21,6 +30,7 @@ from . import (
     roofline_report,
     slingshot,
 )
+from .common import save_result
 
 BENCHMARKS = {
     "profile_octotiger": profile_octotiger.run,  # Fig 1
@@ -35,12 +45,99 @@ BENCHMARKS = {
     "roofline_report": roofline_report.run,  # framework §Roofline
 }
 
+SMOKE_SEED = 0  # deterministic: the workloads take explicit seeds, no RNG here
+SMOKE_PAYLOAD_SIZES = (8, 600, 3_000, 12_000, 40_000)
+SMOKE_DES_VARIANTS = ("lci", "lci_eager_64k", "lci_noeager", "mpi", "mpi_a")
+
+
+def _smoke_core_variant(name: str, fabric_kwargs=None) -> dict:
+    """Deliver mixed-size parcels on one variant; bounded drain raises on
+    deadlock/quiesce failure, which the caller records as a regression."""
+    from repro.core.harness import deliver_payloads
+
+    payloads = [bytes([s % 251]) * s for s in SMOKE_PAYLOAD_SIZES]
+    world, got = deliver_payloads(name, payloads, fabric_kwargs=fabric_kwargs, max_rounds=50_000)
+    delivered = sorted(len(a[0]) for a in got)
+    if delivered != sorted(len(p) for p in payloads):
+        raise RuntimeError(f"{name}: delivered {delivered}, expected {sorted(SMOKE_PAYLOAD_SIZES)}")
+    st = world.fabric.stats
+    return {
+        "messages": st.messages,
+        "eager_msgs": st.eager_msgs,
+        "rendezvous_msgs": st.rendezvous_msgs,
+        "backpressure_events": st.backpressure_events,
+    }
+
+
+def smoke() -> int:
+    from repro.amtsim.workloads import flood
+    from repro.core.variants import variant_names
+
+    failures: list = []
+    results: dict = {"variants": {}, "seed": SMOKE_SEED}
+    t0 = time.time()
+
+    # 1. every variant delivers and quiesces
+    for name in variant_names():
+        try:
+            results["variants"][name] = _smoke_core_variant(name)
+            print(f"smoke core  {name:16s} ok  ({results['variants'][name]['messages']} msgs)")
+        except Exception as exc:  # noqa: BLE001 - each variant judged alone
+            traceback.print_exc()
+            failures.append(f"core:{name}: {exc}")
+
+    # 2. bounded injection: backpressure must fire AND everything delivers
+    try:
+        bounded = _smoke_core_variant(
+            "lci", fabric_kwargs=dict(send_queue_depth=2, bounce_buffers=2, bounce_buffer_size=65_536)
+        )
+        results["bounded"] = bounded
+        if bounded["backpressure_events"] <= 0:
+            raise RuntimeError("bounded fabric produced no backpressure events")
+        print(f"smoke bound lci ok  ({bounded['backpressure_events']} backpressure events)")
+    except Exception as exc:  # noqa: BLE001
+        traceback.print_exc()
+        failures.append(f"bounded: {exc}")
+
+    # 3. protocol selection: eager strictly beats rendezvous on messages
+    try:
+        e = results["variants"].get("lci_eager") or _smoke_core_variant("lci_eager")
+        r = results["variants"].get("lci_noeager") or _smoke_core_variant("lci_noeager")
+        if not e["messages"] < r["messages"]:
+            raise RuntimeError(f"eager used {e['messages']} msgs, noeager {r['messages']}")
+        print(f"smoke proto ok  (eager {e['messages']} < noeager {r['messages']} msgs)")
+    except Exception as exc:  # noqa: BLE001
+        traceback.print_exc()
+        failures.append(f"protocol: {exc}")
+
+    # 4. DES model quiesces and delivers every message
+    results["des"] = {}
+    for name in SMOKE_DES_VARIANTS:
+        try:
+            res = flood(name, msg_size=64, nthreads=4, nmsgs=200, max_seconds=2.0)
+            results["des"][name] = {"delivered": res.messages, "rate": res.rate}
+            if res.messages != 200:
+                raise RuntimeError(f"DES {name} delivered {res.messages}/200")
+            print(f"smoke des   {name:16s} ok  ({res.rate/1e6:.2f}M/s)")
+        except Exception as exc:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(f"des:{name}: {exc}")
+
+    results["failures"] = failures
+    results["elapsed"] = time.time() - t0
+    save_result("smoke", results)
+    print(f"\nsmoke: {len(failures)} failure(s) in {results['elapsed']:.1f}s: {failures or 'none'}")
+    return 1 if failures else 0
+
 
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true", help="tiny deterministic protocol-regression gate")
     args = ap.parse_args()
+    if args.smoke:
+        return smoke()
     names = list(BENCHMARKS) if not args.only else args.only.split(",")
     failures = []
     n_claims = n_ok = 0

@@ -60,6 +60,10 @@ class SimConfig:
     # paper §3.3.4's omitted experiment: reserve n cores that ONLY drive
     # the progress engine (never execute tasks)
     progress_workers: int = 0
+    # Protocol engine: payloads up to this size ship as ONE eager message
+    # (bounce-buffer copy cost, no rendezvous round trip); 0 disables the
+    # eager path beyond plain header piggybacking.
+    eager_threshold: int = PIGGYBACK_LIMIT
 
 
 def sim_config_for_variant(name: str) -> SimConfig:
@@ -79,6 +83,7 @@ def sim_config_for_variant(name: str) -> SimConfig:
         ndevices=cfg.ndevices,
         lock_mode=cfg.lock_mode,
         progress_mode=cfg.progress_mode,
+        eager_threshold=cfg.eager_threshold,
     )
 
 
@@ -331,11 +336,18 @@ class SimWorld:
         mech, cfg = self.mech, self.cfg
         dev = self.ranks[op.src].device_for_worker(worker.wid)
         op.src_dev_idx = dev.index
-        if op.size > PIGGYBACK_LIMIT:
+        # Protocol selection: one-message limit is the piggyback limit, or
+        # the eager threshold when the eager path extends past it.  Eager
+        # shipment beyond the plain piggyback limit pays the bounce-buffer
+        # copy (memcpy-bound) instead of the rendezvous round trip.
+        one_msg_limit = max(PIGGYBACK_LIMIT, cfg.eager_threshold) if cfg.eager_threshold > 0 else PIGGYBACK_LIMIT
+        if op.size > one_msg_limit:
             op.followup_chunks = [op.size] + op.followup_chunks
             piggy = 0
         else:
             piggy = op.size
+            if op.size > PIGGYBACK_LIMIT:
+                yield Timeout(mech.t_serialize_per_byte * op.size)
         # Lock discipline.  Sends take the coarse lock *blocking* even in the
         # 'try' variants — paper footnote 1: only progress can use try locks.
         locked = cfg.mpi or cfg.lock_mode in (LockMode.BLOCK, LockMode.TRY)

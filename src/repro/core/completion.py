@@ -50,6 +50,17 @@ class CompletionQueue:
     def pop(self) -> Optional[Any]:  # pragma: no cover - interface
         raise NotImplementedError
 
+    def drain(self, max_n: int = 16) -> List[Any]:
+        """Pop up to ``max_n`` items (stops at the first empty poll) — the
+        parcelport's completion-dispatch batch."""
+        out: List[Any] = []
+        for _ in range(max_n):
+            item = self.pop()
+            if item is None:
+                break
+            out.append(item)
+        return out
+
     def __len__(self) -> int:  # pragma: no cover - interface
         raise NotImplementedError
 

@@ -8,6 +8,9 @@ communication library adds on top of verbs:
   queue (receives may be posted after the message arrives);
 * one-sided ``put_dynamic`` whose remote completion lands directly in a
   client-visible completion object (LCI's ideal primitive, §3.3.1);
+* **bounded injection**: ``post_send``/``put_dynamic`` return False when the
+  underlying fabric refuses the post (full send queue / exhausted bounce
+  pool, §3.3.4) — the client retries or throttles;
 * an **explicit progress engine** (`progress()`), §3.3.4;
 * a configurable **lock discipline** for the factor studies (§5.3):
   ``none``   — fine-grained: only the fabric's per-resource locks,
@@ -27,7 +30,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from .fabric import Fabric, NetDevice
 
-__all__ = ["LCIDevice", "LockMode", "CompletionRecord"]
+__all__ = ["LCIDevice", "LockMode", "CompletionRecord", "WIRE_OVERHEAD"]
 
 
 class LockMode:
@@ -40,6 +43,9 @@ class LockMode:
 # in the immediate instead (no matching at all).
 _WIRE_FMT = "<q"
 _WIRE_LEN = struct.calcsize(_WIRE_FMT)
+# Bytes post_send prepends to every two-sided payload — clients sizing a
+# message against a bounce buffer must budget for it (puts add nothing).
+WIRE_OVERHEAD = _WIRE_LEN
 
 
 @dataclass
@@ -116,12 +122,13 @@ class LCIDevice:
             self._coarse.release()
 
     # ------------------------------------------------------------- two-sided
-    def post_send(self, dst_rank: int, dst_dev: int, tag: int, data: bytes, comp: Any, ctx: Any = None) -> None:
-        """Nonblocking tagged send; ``comp`` completes locally when sent."""
+    def post_send(self, dst_rank: int, dst_dev: int, tag: int, data: bytes, comp: Any, ctx: Any = None, eager: bool = False) -> bool:
+        """Nonblocking tagged send; ``comp`` completes locally when sent.
+        Returns False (EAGAIN) when the fabric backpressures the post."""
         self._acquire()
         try:
             wire = struct.pack(_WIRE_FMT, tag) + data
-            self.net.post_send(dst_rank, dst_dev, wire, ctx=("send", tag, comp, ctx))
+            return self.net.post_send(dst_rank, dst_dev, wire, ctx=("send", tag, comp, ctx), eager=eager)
         finally:
             self._release()
 
@@ -155,15 +162,20 @@ class LCIDevice:
         _complete(pr.comp, CompletionRecord(op="recv", tag=tag, src_rank=src, data=data, ctx=pr.ctx))
 
     # -------------------------------------------------------------- one-sided
-    def put_dynamic(self, dst_rank: int, dst_dev: int, data: bytes, comp: Any, ctx: Any = None) -> None:
+    def put_dynamic(self, dst_rank: int, dst_dev: int, data: bytes, comp: Any, ctx: Any = None, eager: bool = False) -> bool:
         """One-sided put into the remote device's dynamic-put completion
         object.  No tag, no matching, no posted receive: the receiver learns
-        about the message by popping its completion queue (paper §3.3.1)."""
+        about the message by popping its completion queue (paper §3.3.1).
+        Returns False (EAGAIN) when the fabric backpressures the post."""
         self._acquire()
         try:
-            self.net.post_put(dst_rank, dst_dev, data, imm=0, ctx=("send", -1, comp, ctx))
+            return self.net.post_put(dst_rank, dst_dev, data, imm=0, ctx=("send", -1, comp, ctx), eager=eager)
         finally:
             self._release()
+
+    def eager_capacity(self) -> Any:
+        """Largest eager message this device can inject (None = unlimited)."""
+        return self.net.eager_capacity()
 
     # ---------------------------------------------------------------- progress
     def progress(self, max_completions: int = 16) -> bool:

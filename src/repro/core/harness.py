@@ -1,0 +1,42 @@
+"""Shared delivery harness over the functional parcelport stack.
+
+One helper used by the benchmark smoke gate, the protocol benchmarks, and
+the test suite: build a world for a named variant, push payloads through
+``async_action``, drain to quiescence, and hand back the world (for
+``world.fabric.stats``) plus what arrived.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .parcelport import World
+from .variants import make_parcelport_factory, max_devices
+
+__all__ = ["deliver_payloads"]
+
+
+def deliver_payloads(
+    variant: str,
+    payloads: Sequence[bytes],
+    n_loc: int = 2,
+    fabric_kwargs: Optional[Dict[str, Any]] = None,
+    zero_copy_threshold: int = 1024,
+    max_rounds: int = 100_000,
+) -> Tuple[World, List[tuple]]:
+    """Send each payload round-robin between localities on ``variant``,
+    drain (raises on deadlock / parked posts), return ``(world, got)``."""
+    world = World(
+        n_loc,
+        make_parcelport_factory(variant),
+        devices_per_rank=max_devices(variant),
+        fabric_kwargs=fabric_kwargs,
+    )
+    got: List[tuple] = []
+    for loc in world.localities:
+        loc.register_action("sink", lambda *a, _g=got: _g.append(a))
+    for i, pl in enumerate(payloads):
+        world.localities[i % n_loc].async_action(
+            (i + 1) % n_loc, "sink", pl, zero_copy_threshold=zero_copy_threshold
+        )
+    world.drain(max_rounds=max_rounds)
+    return world, got

@@ -2,6 +2,15 @@
 
 Techniques (paper Table 1) and the flag that controls each:
 
+* **Protocol** — ``eager_threshold``: parcels whose total size fits the
+  threshold ship **eager** (one fabric message through a pre-registered
+  bounce buffer, zc chunks inline, zero follow-up round trips); larger
+  parcels use the **rendezvous** layout (header + sequential follow-ups).
+  ``eager_threshold=0`` disables the eager path (the ``lci_noeager``
+  variant).  Backpressured posts (full send queue / exhausted bounce pool,
+  §3.3.4) park in a retry queue that ``background_work`` drains under a
+  bounded per-call budget — the sender-side throttle that keeps injection
+  inside the fabric's resource limits.
 * **Asynchrony** — ``header_mode``: ``'put'`` uses the one-sided *dynamic
   put* primitive, delivering headers straight into a completion queue;
   ``'sendrecv'`` pre-posts tagged receives (the MPI-like path) with either a
@@ -26,8 +35,9 @@ parcel is in flight, so op state machines are never touched concurrently.
 from __future__ import annotations
 
 import threading
+from collections import deque
 from dataclasses import dataclass, field, replace
-from typing import Any, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 from .completion import (
     CompletionQueue,
@@ -35,7 +45,7 @@ from .completion import (
     SynchronizerPool,
     make_completion_queue,
 )
-from .device import CompletionRecord, LCIDevice, LockMode
+from .device import WIRE_OVERHEAD, CompletionRecord, LCIDevice, LockMode
 from .fabric import Fabric
 from .parcel import (
     HEADER_PIGGYBACK_LIMIT,
@@ -43,6 +53,8 @@ from .parcel import (
     Parcel,
     SendCallback,
     decode_header,
+    eager_wire_size,
+    encode_eager,
     encode_header,
 )
 from .parcelport import Locality, Parcelport
@@ -65,6 +77,13 @@ class LCIPPConfig:
     lock_mode: str = LockMode.NONE
     progress_mode: str = "explicit"  # 'explicit' | 'implicit'
     aggregation: bool = False
+    # Protocol engine: parcels with total_bytes <= eager_threshold ship as
+    # one eager message; 0 disables the eager path entirely.  The default
+    # matches the piggyback limit, so plain small parcels behave as before
+    # and small zero-copy chunks stop costing follow-up round trips.
+    eager_threshold: int = HEADER_PIGGYBACK_LIMIT
+    # Sender-side throttle: backpressured posts retried per background_work.
+    retry_budget: int = 8
 
     def variant(self, **kw) -> "LCIPPConfig":
         return replace(self, **kw)
@@ -107,6 +126,12 @@ class LCIParcelport(Parcelport):
             net = fabric.device(rank, d)
             dev = LCIDevice(net, lock_mode=config.lock_mode, put_target_comp=self.cq)
             self.devices.append(dev)
+        # Backpressured posts awaiting retry (sender-side throttle, §3.3.4).
+        self._retry_q: deque = deque()
+        self._retry_lock = threading.Lock()
+        self.stats_eager_sent = 0
+        self.stats_rendezvous_sent = 0
+        self.stats_backpressure_parks = 0
         # Header receive plumbing for sendrecv mode.
         self._header_sync: Optional[Synchronizer] = None
         self._header_sync_lock = threading.Lock()
@@ -131,8 +156,68 @@ class LCIParcelport(Parcelport):
         self.sync_pool.add(sync, (kind, op))
         return sync
 
+    # -- injection backpressure (paper §3.3.4) ------------------------------
+    def _post_or_park(self, thunk: Callable[[], bool]) -> None:
+        """Run a fabric post; if it EAGAINs, park it for a later retry."""
+        if thunk():
+            return
+        self.stats_backpressure_parks += 1
+        with self._retry_lock:
+            self._retry_q.append(thunk)
+
+    def _drain_retries(self) -> bool:
+        """Retry up to ``retry_budget`` parked posts; stop at the first one
+        that still backpressures (the fabric has not freed resources, so the
+        rest would fail too — throttle instead of hammering)."""
+        moved = False
+        for _ in range(self.cfg.retry_budget):
+            with self._retry_lock:
+                if not self._retry_q:
+                    return moved
+                thunk = self._retry_q.popleft()
+            if thunk():
+                moved = True
+            else:
+                with self._retry_lock:
+                    self._retry_q.appendleft(thunk)
+                return moved
+        return moved
+
+    def retry_queue_depth(self) -> int:
+        return len(self._retry_q)
+
+    def pending_work(self) -> bool:
+        return bool(self._retry_q)
+
+    # -- protocol selection (eager vs rendezvous) ---------------------------
+    def _use_eager(self, parcel: Parcel, dev: LCIDevice) -> bool:
+        if self.cfg.eager_threshold <= 0 or parcel.total_bytes > self.cfg.eager_threshold:
+            return False
+        cap = dev.eager_capacity()
+        if cap is None:
+            return True
+        # sendrecv mode prepends the library's tag word to the payload; the
+        # whole wire message must fit a bounce buffer or acquire() would
+        # fail on every retry (silent parcel loss, not backpressure).
+        overhead = WIRE_OVERHEAD if self.cfg.header_mode == "sendrecv" else 0
+        return eager_wire_size(parcel) + overhead <= cap
+
     def _send_impl(self, dest: int, parcel: Parcel, cb: Optional[SendCallback]) -> None:
         d = self._worker_device()
+        dev = self.devices[d]
+        if self._use_eager(parcel, dev):
+            # Eager: the whole parcel in one bounce-buffered fabric message.
+            wire = encode_eager(parcel, device_index=d)
+            op = _SendOp(dest, parcel, cb, [(TAG_HEADER, wire)], d)
+            comp = self._comp_for("send", op)
+            if self.cfg.header_mode == "put":
+                self._post_or_park(lambda: dev.put_dynamic(dest, d, wire, comp, ctx=("send", op), eager=True))
+            else:
+                self._post_or_park(lambda: dev.post_send(dest, d, TAG_HEADER, wire, comp, ctx=("send", op), eager=True))
+            self.stats_eager_sent += 1
+            self.stats_sent += 1
+            return
+        # Rendezvous: header first, then sequential follow-ups.
         header = encode_header(parcel, device_index=d)
         msgs: List[Tuple[int, bytes]] = [(TAG_HEADER, header)]
         if parcel.nzc_chunk.size > HEADER_PIGGYBACK_LIMIT:
@@ -140,12 +225,12 @@ class LCIParcelport(Parcelport):
         for c in parcel.zc_chunks:
             msgs.append((parcel.parcel_id, c.data))
         op = _SendOp(dest, parcel, cb, msgs, d)
-        dev = self.devices[d]
         comp = self._comp_for("send", op)
         if self.cfg.header_mode == "put":
-            dev.put_dynamic(dest, d, header, comp, ctx=("send", op))
+            self._post_or_park(lambda: dev.put_dynamic(dest, d, header, comp, ctx=("send", op)))
         else:
-            dev.post_send(dest, d, TAG_HEADER, header, comp, ctx=("send", op))
+            self._post_or_park(lambda: dev.post_send(dest, d, TAG_HEADER, header, comp, ctx=("send", op)))
+        self.stats_rendezvous_sent += 1
         self.stats_sent += 1
 
     def _advance_send(self, op: _SendOp) -> None:
@@ -154,7 +239,7 @@ class LCIParcelport(Parcelport):
             op.next_idx += 1
             dev = self.devices[op.dev]
             comp = self._comp_for("send", op)
-            dev.post_send(op.dest, op.dev, tag, data, comp, ctx=("send", op))
+            self._post_or_park(lambda: dev.post_send(op.dest, op.dev, tag, data, comp, ctx=("send", op)))
         else:
             if op.cb is not None:
                 op.cb(op.parcel)
@@ -162,6 +247,20 @@ class LCIParcelport(Parcelport):
     # ------------------------------------------------------------------ recv
     def _process_header(self, src: int, payload: bytes) -> None:
         h = decode_header(payload)
+        if h.is_eager:
+            # Everything arrived inline: copy chunks out of the bounce
+            # buffer and deliver — no follow-up receives, no round trips.
+            self.deliver(
+                Parcel(
+                    parcel_id=h.parcel_id,
+                    source=h.source,
+                    dest=h.dest,
+                    nzc_chunk=Chunk(h.piggybacked_nzc),
+                    zc_chunks=[Chunk(b) for b in h.inline_zc],
+                    device_index=h.device_index,
+                )
+            )
+            return
         op = _RecvOp(h)
         if h.piggybacked_nzc is not None and not h.zc_sizes:
             self._finish_recv(op)
@@ -224,13 +323,13 @@ class LCIParcelport(Parcelport):
         my_dev = self.devices[self._worker_device()]
         if cfg.progress_mode == "explicit":
             progressed |= my_dev.progress()
+        # Retry backpressured posts before dispatching new completions — the
+        # progress() above reaped send completions, freeing fabric slots.
+        progressed |= self._drain_retries()
 
         polled_something = False
         if cfg.followup_comp == "queue" or cfg.header_mode == "put":
-            for _ in range(8):
-                rec = self.cq.pop()
-                if rec is None:
-                    break
+            for rec in self.cq.drain(8):
                 polled_something = True
                 progressed = True
                 self._dispatch(rec)
@@ -261,4 +360,5 @@ class LCIParcelport(Parcelport):
             # the MPI behaviour: progress only as a side effect of a failed
             # completion test
             progressed |= my_dev.progress()
+            progressed |= self._drain_retries()
         return progressed

@@ -184,6 +184,9 @@ class MPIParcelport(Parcelport):
         )
         self.deliver(parcel)
 
+    def pending_work(self) -> bool:
+        return self.mpi.pending_post_count() > 0
+
     # -- the worker entry point ---------------------------------------------
     def background_work(self) -> bool:
         progressed = self._check_header()

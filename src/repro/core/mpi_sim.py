@@ -17,6 +17,7 @@ parcelport's inefficiencies (§3.3):
 from __future__ import annotations
 
 import threading
+from collections import deque
 from typing import Any, Optional, Tuple
 
 from .completion import Synchronizer
@@ -48,12 +49,28 @@ class MPISim:
         self.rank = rank
         # MPI's internal global lock (MPI_THREAD_MULTIPLE big lock).
         self._big_lock = threading.Lock()
+        # Sends the fabric backpressured, queued MPI-internally and flushed
+        # on progress (real MPI buffers nonblocking sends the NIC refuses).
+        # FIFO preserves MPI's non-overtaking order guarantee.
+        self._pending_posts: deque = deque()
 
     def isend(self, dest: int, tag: int, data: bytes) -> MPIRequest:
         req = MPIRequest("send")
         with self._big_lock:
-            self._dev.post_send(dest, 0, tag, data, req.sync)
+            if self._pending_posts or not self._dev.post_send(dest, 0, tag, data, req.sync):
+                self._pending_posts.append((dest, tag, data, req.sync))
         return req
+
+    def _flush_pending(self) -> None:
+        """Retry backpressured sends in order; caller holds the big lock."""
+        while self._pending_posts:
+            dest, tag, data, sync = self._pending_posts[0]
+            if not self._dev.post_send(dest, 0, tag, data, sync):
+                return
+            self._pending_posts.popleft()
+
+    def pending_post_count(self) -> int:
+        return len(self._pending_posts)
 
     def irecv(self, source: int, tag: int) -> MPIRequest:
         req = MPIRequest("recv")
@@ -73,6 +90,7 @@ class MPISim:
         with self._big_lock:
             # implicit progress as a side effect of testing
             self._dev.progress()
+            self._flush_pending()
         rec = req.sync.test()
         if rec is None:
             return False, None

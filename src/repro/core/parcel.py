@@ -17,6 +17,14 @@ The wire protocol (paper §3.2): each parcel becomes one **header message**
 *follow-up* messages — the nzc chunk message and one message per zero-copy
 chunk, sent sequentially per-parcel.  Small nzc chunks are piggybacked onto
 the header message.
+
+Protocol selection (paper §3.3, LCI's eager/rendezvous split): parcels whose
+*total* size fits the parcelport's ``eager_threshold`` are shipped **eager**
+— the nzc chunk *and* every zero-copy chunk ride inline in one fabric
+message (copied through pre-registered bounce buffers, no follow-up round
+trips).  Larger parcels use the **rendezvous** layout above.  On the wire
+the two are distinguished by a flag bit in the header, so a receiver decodes
+either from the same ``decode_header`` entry point.
 """
 from __future__ import annotations
 
@@ -37,9 +45,13 @@ HEADER_PIGGYBACK_LIMIT = 8 * 1024
 
 # Header wire layout:  parcel_id, source, dest, device_index (the LCI device
 # the follow-ups will use, paper §3.3.3), n_zc_chunks, nzc_size,
-# piggybacked flag, followed by zc chunk sizes and optionally the nzc bytes.
+# flags byte, followed by zc chunk sizes, optionally the nzc bytes, and —
+# for eager messages — every zc chunk inline.
 _HEADER_FMT = "<QIIIIIB"
 _HEADER_FIXED = struct.calcsize(_HEADER_FMT)
+
+FLAG_PIGGYBACK = 0x01  # nzc chunk rides in this message
+FLAG_EAGER = 0x02  # zc chunks ride inline too: no follow-ups at all
 
 
 @dataclass
@@ -85,9 +97,16 @@ class Header:
     zc_sizes: Tuple[int, ...]
     nzc_size: int
     piggybacked_nzc: Optional[bytes]  # present iff nzc chunk rode along
+    inline_zc: Optional[List[bytes]] = None  # eager messages: zc chunks inline
+
+    @property
+    def is_eager(self) -> bool:
+        return self.inline_zc is not None
 
     @property
     def num_followups(self) -> int:
+        if self.inline_zc is not None:
+            return 0
         n = len(self.zc_sizes)
         if self.piggybacked_nzc is None:
             n += 1
@@ -95,7 +114,7 @@ class Header:
 
 
 def encode_header(parcel: Parcel, device_index: int) -> bytes:
-    """Encode the header message for ``parcel`` (size-bounded by design)."""
+    """Encode the rendezvous header message (size-bounded by design)."""
     piggy = parcel.nzc_chunk.size <= HEADER_PIGGYBACK_LIMIT
     head = struct.pack(
         _HEADER_FMT,
@@ -105,19 +124,52 @@ def encode_header(parcel: Parcel, device_index: int) -> bytes:
         device_index,
         len(parcel.zc_chunks),
         parcel.nzc_chunk.size,
-        1 if piggy else 0,
+        FLAG_PIGGYBACK if piggy else 0,
     )
     sizes = struct.pack(f"<{len(parcel.zc_chunks)}Q", *[c.size for c in parcel.zc_chunks])
     body = parcel.nzc_chunk.data if piggy else b""
     return head + sizes + body
 
 
+def encode_eager(parcel: Parcel, device_index: int) -> bytes:
+    """Encode the whole parcel as ONE eager message: header fields, nzc
+    chunk and every zero-copy chunk inline.  The receiver copies the chunks
+    out of the bounce buffer — no rendezvous round trips."""
+    head = struct.pack(
+        _HEADER_FMT,
+        parcel.parcel_id,
+        parcel.source,
+        parcel.dest,
+        device_index,
+        len(parcel.zc_chunks),
+        parcel.nzc_chunk.size,
+        FLAG_PIGGYBACK | FLAG_EAGER,
+    )
+    sizes = struct.pack(f"<{len(parcel.zc_chunks)}Q", *[c.size for c in parcel.zc_chunks])
+    parts = [head, sizes, parcel.nzc_chunk.data]
+    parts.extend(c.data for c in parcel.zc_chunks)
+    return b"".join(parts)
+
+
+def eager_wire_size(parcel: Parcel) -> int:
+    """Size of :func:`encode_eager`'s output without building it (used to
+    check bounce-buffer capacity before choosing the eager path)."""
+    return _HEADER_FIXED + 8 * len(parcel.zc_chunks) + parcel.total_bytes
+
+
 def decode_header(buf: bytes) -> Header:
-    (pid, src, dst, dev, n_zc, nzc_size, piggy) = struct.unpack_from(_HEADER_FMT, buf, 0)
+    (pid, src, dst, dev, n_zc, nzc_size, flags) = struct.unpack_from(_HEADER_FMT, buf, 0)
     off = _HEADER_FIXED
     zc_sizes = struct.unpack_from(f"<{n_zc}Q", buf, off)
     off += 8 * n_zc
-    piggy_nzc = bytes(buf[off : off + nzc_size]) if piggy else None
+    piggy_nzc = bytes(buf[off : off + nzc_size]) if flags & FLAG_PIGGYBACK else None
+    inline_zc: Optional[List[bytes]] = None
+    if flags & FLAG_EAGER:
+        off += nzc_size
+        inline_zc = []
+        for sz in zc_sizes:
+            inline_zc.append(bytes(buf[off : off + sz]))
+            off += sz
     return Header(
         parcel_id=pid,
         source=src,
@@ -126,6 +178,7 @@ def decode_header(buf: bytes) -> Header:
         zc_sizes=tuple(zc_sizes),
         nzc_size=nzc_size,
         piggybacked_nzc=piggy_nzc,
+        inline_zc=inline_zc,
     )
 
 

@@ -36,10 +36,21 @@ __all__ = ["Parcelport", "Locality", "World", "aggregate_parcels", "split_aggreg
 
 AGG_MAGIC = 0xA6
 
+# Parcel-id bit layout: bits 0..39 are the per-locality counter, bits 40..47
+# the source rank (Locality seeds its counter at ``rank << 40``), and bits
+# 48..63 are RESERVED for aggregate sub-ids: parcel ``i`` of a split
+# aggregate gets ``base_id | ((i + 1) << AGG_SUB_SHIFT)``.  Ordinary ids
+# never touch the reserved range, so sub-ids cannot collide with dense
+# neighbouring ids (the old ``base_id * 1000 + i`` scheme collided as soon
+# as ids were dense or an aggregate held >= 1000 parcels).
+AGG_SUB_SHIFT = 48
+AGG_MAX_PARCELS = (1 << 16) - 1
+
 
 def aggregate_parcels(parcels: Sequence[Parcel]) -> Parcel:
     """Merge parcels sharing a destination into one (paper §2.2.2)."""
     assert parcels, "cannot aggregate zero parcels"
+    assert len(parcels) <= AGG_MAX_PARCELS, "aggregate exceeds the sub-id bit range"
     first = parcels[0]
     parts = [struct.pack("<BI", AGG_MAGIC, len(parcels))]
     zc: List[Chunk] = []
@@ -75,7 +86,7 @@ def split_aggregate(parcel: Parcel) -> List[Parcel]:
         zc_off += n_zc
         out.append(
             Parcel(
-                parcel_id=parcel.parcel_id * 1000 + i,
+                parcel_id=parcel.parcel_id | ((i + 1) << AGG_SUB_SHIFT),
                 source=parcel.source,
                 dest=parcel.dest,
                 nzc_chunk=Chunk(bytes(nzc)),
@@ -123,6 +134,13 @@ class Parcelport:
 
     def background_work(self) -> bool:
         raise NotImplementedError
+
+    def pending_work(self) -> bool:
+        """True while the parcelport still holds work no completion will
+        ever surface on its own (e.g. backpressured posts parked for
+        retry).  ``World.drain`` refuses to call a world quiescent while
+        any parcelport reports pending work."""
+        return False
 
     # -- subclass hook --------------------------------------------------------
     def _send_impl(self, dest: int, parcel: Parcel, cb: Optional[SendCallback]) -> None:
@@ -194,8 +212,9 @@ class World:
         n_localities: int,
         parcelport_factory: Callable[["Locality", Fabric], Parcelport],
         devices_per_rank: int = 1,
+        fabric_kwargs: Optional[Dict[str, Any]] = None,
     ):
-        self.fabric = Fabric(n_localities, devices_per_rank=devices_per_rank)
+        self.fabric = Fabric(n_localities, devices_per_rank=devices_per_rank, **(fabric_kwargs or {}))
         self.localities = [Locality(r, self) for r in range(n_localities)]
         for loc in self.localities:
             loc.parcelport = parcelport_factory(loc, self.fabric)
@@ -211,7 +230,10 @@ class World:
         return any_progress
 
     def drain(self, max_rounds: int = 100_000) -> None:
-        """Pump until quiescent (no progress for a few consecutive rounds)."""
+        """Pump until quiescent (no progress for a few consecutive rounds).
+        Raises if the world stops moving while a parcelport still holds
+        parked (backpressured) posts — that is silent message loss, not
+        quiescence."""
         idle = 0
         for _ in range(max_rounds):
             if self.progress_all():
@@ -219,5 +241,10 @@ class World:
             else:
                 idle += 1
                 if idle > 8:
+                    if any(loc.parcelport.pending_work() for loc in self.localities):
+                        raise RuntimeError(
+                            "world stalled with backpressured posts still parked "
+                            "(undeliverable send: check bounce-buffer sizing / send-queue depth)"
+                        )
                     return
         raise RuntimeError("world did not quiesce")

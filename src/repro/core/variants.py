@@ -81,6 +81,15 @@ for _n in (1, 2, 4, 8, 16, 32):
     VARIANTS[f"lci_d{_n}"] = LCIPPConfig(name=f"lci_d{_n}", ndevices=_n)
     VARIANTS[f"lci_try_d{_n}"] = LCIPPConfig(name=f"lci_try_d{_n}", ndevices=_n, lock_mode=LockMode.TRY)
 
+# Protocol factor study (paper §3.3/§4.2: eager vs rendezvous selection).
+# ``lci_noeager`` forces every parcel down the rendezvous path (header +
+# follow-ups); the ``lci_eager*`` family raises the one-message limit so
+# small zero-copy chunks ship inline through bounce buffers.
+VARIANTS["lci_noeager"] = LCIPPConfig(name="lci_noeager", eager_threshold=0)
+for _kib in (16, 64):
+    VARIANTS[f"lci_eager_{_kib}k"] = LCIPPConfig(name=f"lci_eager_{_kib}k", eager_threshold=_kib * 1024)
+VARIANTS["lci_eager"] = VARIANTS["lci_eager_16k"].variant(name="lci_eager")
+
 
 def variant_names():
     return ["mpi", "mpi_a"] + sorted(VARIANTS)

@@ -1,0 +1,13 @@
+"""JAX version compatibility for Pallas TPU kernels.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` in newer
+JAX releases; resolve whichever this installation provides so the kernels
+run on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

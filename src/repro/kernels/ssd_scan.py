@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 __all__ = ["ssd_chunk_kernel"]
 
 
@@ -81,7 +83,7 @@ def ssd_chunk_kernel(
             pl.BlockSpec((1, 1, 1, p, n), lambda b_, h_, c_: (b_, h_, c_, 0, 0)),
         ],
         out_shape=[y_shape, s_shape],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel"),
         ),
         interpret=interpret,

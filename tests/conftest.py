@@ -6,6 +6,9 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# sibling test helpers (_hypothesis_compat) are importable regardless of how
+# pytest was invoked
+sys.path.insert(0, os.path.dirname(__file__))
 
 import jax
 

@@ -3,7 +3,7 @@ property checks), synchronizers, pools — paper §3.3.2/§5.2 structures."""
 import threading
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.completion import (
     LCRQueue,

@@ -1,6 +1,6 @@
 """Parcel serialization: roundtrip, zero-copy threshold, aggregation."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.parcel import (
     Chunk,

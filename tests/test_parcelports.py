@@ -1,6 +1,6 @@
 """End-to-end parcel delivery across every parcelport variant (Figs 6-9)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.parcelport import World
 from repro.core.variants import make_parcelport_factory, variant_names

@@ -1,0 +1,233 @@
+"""Eager/rendezvous protocol engine + injection backpressure (this repo's
+ISSUE 1 tentpole): crossover behaviour around ``eager_threshold``, retry
+under a bounded fabric, aggregation x eager across every variant, and the
+reserved-bit-range aggregate sub-id scheme."""
+import pytest
+
+from repro.core.fabric import Fabric, RegisteredBufferPool
+from repro.core.harness import deliver_payloads as run_world
+from repro.core.parcel import (
+    Chunk,
+    Parcel,
+    decode_header,
+    eager_wire_size,
+    encode_eager,
+    serialize_action,
+)
+from repro.core.parcelport import (
+    AGG_SUB_SHIFT,
+    World,
+    aggregate_parcels,
+    split_aggregate,
+)
+from repro.core.variants import VARIANTS, make_parcelport_factory
+from repro.core.lci_parcelport import LCIParcelport
+
+
+# ------------------------------------------------------- eager wire format
+def test_eager_encode_decode_roundtrip():
+    p = serialize_action(7, 0, 1, "act", (b"meta", b"z" * 4000), zero_copy_threshold=1024)
+    assert p.num_zc == 1
+    wire = encode_eager(p, device_index=1)
+    assert len(wire) == eager_wire_size(p)
+    h = decode_header(wire)
+    assert h.is_eager and h.num_followups == 0
+    assert h.parcel_id == 7 and h.device_index == 1
+    assert h.piggybacked_nzc == p.nzc_chunk.data
+    assert h.inline_zc == [p.zc_chunks[0].data]
+
+
+# ------------------------------------------------- crossover round trips
+@pytest.mark.parametrize("size", [100, 2_000, 14_000, 15_500, 17_000, 60_000])
+def test_eager_rendezvous_crossover(size):
+    """Sizes straddling lci_eager's 16 KiB threshold round-trip on both
+    sides of the crossover, and land on the right protocol counter."""
+    world, got = run_world("lci_eager", [bytes([size % 251]) * size])
+    assert [len(a[0]) for a in got] == [size]
+    st = world.fabric.stats
+    # the serialized parcel is a bit larger than the payload; anything
+    # comfortably under/over 16 KiB must pick the matching protocol
+    if size <= 15_500:
+        assert st.eager_msgs >= 1 and st.rendezvous_msgs == 0
+    elif size >= 17_000:
+        assert st.eager_msgs == 0 and st.rendezvous_msgs >= 2
+
+
+def test_eager_fewer_fabric_messages_than_noeager():
+    """The acceptance gate: for sub-threshold parcels carrying zero-copy
+    chunks, the eager variant uses strictly fewer fabric messages/parcel."""
+    payloads = [bytes([i]) * 4_000 for i in range(8)]  # zc chunks at 1 KiB thr.
+    w_eager, got_e = run_world("lci_eager", payloads)
+    w_plain, got_p = run_world("lci_noeager", payloads)
+    assert len(got_e) == len(got_p) == len(payloads)
+    assert w_eager.fabric.stats.messages < w_plain.fabric.stats.messages
+    assert w_eager.fabric.stats.messages == len(payloads)  # one msg each
+    assert w_plain.fabric.stats.messages == 2 * len(payloads)  # header + zc
+
+
+def test_eager_threshold_zero_forces_rendezvous():
+    world, got = run_world("lci_noeager", [b"x" * 50])
+    assert len(got) == 1
+    assert world.fabric.stats.eager_msgs == 0
+    assert world.fabric.stats.rendezvous_msgs >= 1
+
+
+def test_eager_respects_bounce_buffer_capacity():
+    """A parcel under the threshold but over the bounce-buffer size must
+    fall back to rendezvous instead of livelocking on acquire()."""
+    world, got = run_world(
+        "lci_eager_64k",
+        [b"q" * 30_000],
+        fabric_kwargs=dict(bounce_buffers=4, bounce_buffer_size=8_192),
+    )
+    assert [len(a[0]) for a in got] == [30_000]
+    assert world.fabric.stats.eager_msgs == 0  # didn't fit a bounce buffer
+
+
+# -------------------------------------------------------- backpressure
+def test_backpressure_retry_tiny_send_queue():
+    world, got = run_world(
+        "lci",
+        [bytes([i % 256]) * 64 for i in range(150)],
+        fabric_kwargs=dict(send_queue_depth=2, bounce_buffers=2, bounce_buffer_size=16_384),
+    )
+    st = world.fabric.stats
+    assert len(got) == 150
+    assert st.backpressure_events > 0
+    for loc in world.localities:
+        pp = loc.parcelport
+        assert pp.retry_queue_depth() == 0  # throttle drained everything
+
+
+def test_backpressure_rendezvous_followups():
+    """Large parcels (rendezvous follow-ups) also ride the retry path."""
+    world, got = run_world(
+        "lci_noeager",
+        [b"B" * 40_000 for _ in range(20)],
+        fabric_kwargs=dict(send_queue_depth=1),
+    )
+    assert len(got) == 20
+    assert world.fabric.stats.backpressure_events > 0
+
+
+def test_eager_sendrecv_wire_overhead_vs_bounce_capacity():
+    """Regression: sendrecv mode prepends an 8-byte tag to the eager wire
+    message; payloads whose wire size sits within that margin of the bounce
+    buffer used to park forever (silent loss).  Every size in the boundary
+    band must deliver — eager if it truly fits, rendezvous otherwise."""
+    for size in range(3_980, 4_080, 8):
+        world, got = run_world(
+            "sendrecv_queue",
+            [b"q" * size],
+            fabric_kwargs=dict(bounce_buffers=4, bounce_buffer_size=4_096),
+        )
+        assert [len(a[0]) for a in got] == [size]
+        pp = world.localities[0].parcelport
+        assert pp.retry_queue_depth() == 0
+
+
+def test_mpi_bounded_fabric_delivers_all():
+    """Regression: MPISim used to drop sends the bounded fabric refused;
+    they must queue MPI-internally and flush on progress."""
+    for variant in ("mpi", "mpi_a"):
+        world, got = run_world(
+            variant,
+            [bytes([i]) * 64 for i in range(10)],
+            fabric_kwargs=dict(send_queue_depth=1),
+        )
+        assert len(got) == 10
+        assert world.fabric.stats.backpressure_events > 0
+
+
+def test_drain_raises_on_undeliverable_parked_post():
+    """A post that can never succeed must turn into a loud drain error,
+    not a quiet 'quiescent' return with the parcel lost."""
+    world = World(2, make_parcelport_factory("lci"), devices_per_rank=2)
+    world.localities[0].parcelport._retry_q.append(lambda: False)
+    with pytest.raises(RuntimeError, match="parked"):
+        world.drain()
+
+
+def test_bounce_pool_recycles():
+    pool = RegisteredBufferPool(2, 1024)
+    a = pool.acquire(100)
+    b = pool.acquire(1024)
+    assert a is not None and b is not None
+    assert pool.acquire(1) is None  # exhausted
+    assert pool.acquire(2048) is None  # never fits
+    pool.release(a)
+    assert pool.free_count() == 1 and pool.acquire(512) is not None
+
+
+def test_fabric_stats_protocol_split():
+    fab = Fabric(2, devices_per_rank=1, recv_slots=4)
+    nd = fab.device(0)
+    assert nd.post_send(1, 0, b"e" * 10, eager=True)
+    assert nd.post_send(1, 0, b"r" * 10)
+    assert fab.stats.eager_msgs == 1 and fab.stats.rendezvous_msgs == 1
+
+
+def test_send_queue_slot_freed_on_cq_reap():
+    fab = Fabric(2, devices_per_rank=1, recv_slots=8, send_queue_depth=1)
+    nd = fab.device(0)
+    assert nd.post_send(1, 0, b"one")
+    assert not nd.post_send(1, 0, b"two")  # ring full until CQ reaped
+    assert fab.stats.backpressure_events == 1
+    nd.poll_cq()
+    assert nd.inflight_sends() == 0
+    assert nd.post_send(1, 0, b"two")
+
+
+# --------------------------------------------- aggregation x eager matrix
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_aggregation_eager_interaction(variant):
+    """Every variant delivers a burst of same-destination parcels (which
+    aggregation may merge) mixed across the eager/rendezvous boundary."""
+    cfg = VARIANTS[variant].variant(aggregation=True)
+    world = World(
+        2,
+        lambda loc, fab: LCIParcelport(loc, fab, cfg),
+        devices_per_rank=cfg.ndevices,
+    )
+    got = []
+    world.localities[1].register_action("sink", lambda *a: got.append(a))
+    payloads = [b"s" * 32, b"m" * 3_000, b"L" * 20_000, b"s2" * 16, b"X" * 70_000]
+    for pl in payloads:
+        world.localities[0].async_action(1, "sink", pl, zero_copy_threshold=1024)
+    world.drain()
+    assert sorted(len(a[0]) for a in got) == sorted(len(p) for p in payloads)
+
+
+# ------------------------------------------------- split_aggregate sub-ids
+def test_split_aggregate_subids_unique_when_dense_and_large():
+    """Regression: the old ``parcel_id * 1000 + i`` scheme collided for
+    dense ids or aggregates of >= 1000 parcels; the reserved bit range
+    cannot."""
+
+    def mk(pid):
+        return Parcel(parcel_id=pid, source=0, dest=1, nzc_chunk=Chunk(b"p"))
+
+    # two dense neighbouring aggregates, each above the old 1000 limit
+    agg_a = aggregate_parcels([mk(500) for _ in range(1100)])
+    agg_b = aggregate_parcels([mk(501) for _ in range(1100)])
+    ids_a = [p.parcel_id for p in split_aggregate(agg_a)]
+    ids_b = [p.parcel_id for p in split_aggregate(agg_b)]
+    all_ids = ids_a + ids_b
+    assert len(set(all_ids)) == len(all_ids)
+    # sub-ids live in the reserved range and preserve the base id
+    for i, sid in enumerate(ids_a):
+        assert sid >> AGG_SUB_SHIFT == i + 1
+        assert sid & ((1 << AGG_SUB_SHIFT) - 1) == 500
+
+
+def test_split_aggregate_roundtrip_content():
+    parcels = [
+        serialize_action(100 + i, 0, 1, "act", (bytes([i]) * (10 + i),), zero_copy_threshold=64)
+        for i in range(5)
+    ]
+    agg = aggregate_parcels(parcels)
+    out = split_aggregate(agg)
+    assert len(out) == 5
+    for orig, split in zip(parcels, out):
+        assert split.nzc_chunk.data == orig.nzc_chunk.data
+        assert [c.data for c in split.zc_chunks] == [c.data for c in orig.zc_chunks]
