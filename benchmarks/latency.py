@@ -1,6 +1,9 @@
 """Paper Fig 3b: latency microbenchmark (1 … 4096 concurrent chains), plus
-the eager-threshold latency sweep: a 16 KiB hop pays a rendezvous round trip
-unless the protocol engine ships it eager through a bounce buffer."""
+the eager-threshold latency sweep (a 16 KiB hop pays a rendezvous round
+trip unless the protocol engine ships it eager through a bounce buffer)
+and the latency-side **crossover calibration** over the paper's Fig 3 size
+ladder: per size, hop latency eager vs forced rendezvous — the calibrated
+threshold is the largest size where eager still cuts the hop."""
 from __future__ import annotations
 
 import sys
@@ -14,6 +17,10 @@ from .common import Claim, save_result, table
 CHAINS = (1, 16, 256, 1024)
 VARIANTS = ("lci", "mpi", "mpi_a")
 EAGER_THRESHOLDS = ((0, "noeager"), (8192, "8k"), (16384, "16k"), (65536, "64k"))
+
+# Fig 3 size ladder for the latency-side crossover calibration.
+CROSSOVER_SIZES = (512, 4096, 8192, 16384, 32768, 65536)
+CROSSOVER_CEILING = 128 * 1024
 
 
 def eager_latency_sweep(fast: bool = False) -> tuple:
@@ -35,6 +42,37 @@ def eager_latency_sweep(fast: bool = False) -> tuple:
               lat["noeager"] / max(lat["16k"], 1e-12)),
     ]
     return rows, lat, claims
+
+
+def crossover_latency_sweep(fast: bool = False) -> tuple:
+    """Per Fig-3 size: one-way hop latency with the eager path wide open vs
+    forced rendezvous.  Sizes at or under the 8 KiB piggyback limit ride
+    the header in BOTH configs and tie exactly; the eager gain appears
+    above it.  The calibrated threshold is the largest size where eager
+    still cuts the hop."""
+    rows = []
+    gains: dict = {}
+    nsteps = 12 if fast else 25
+    for size in CROSSOVER_SIZES:
+        lat_e = chains(
+            replace(sim_config_for_variant("lci"), name="lci_xover_eager", eager_threshold=CROSSOVER_CEILING),
+            msg_size=size, nchains=8, nsteps=nsteps, nthreads=8, max_seconds=5.0,
+        ).elapsed
+        lat_r = chains(
+            replace(sim_config_for_variant("lci"), name="lci_xover_rdv", eager_threshold=0),
+            msg_size=size, nchains=8, nsteps=nsteps, nthreads=8, max_seconds=5.0,
+        ).elapsed
+        gains[size] = lat_r / max(lat_e, 1e-12)
+        rows.append({"size": f"{size}B" if size < 1024 else f"{size//1024}KiB",
+                     "eager": f"{lat_e*1e6:.2f}us", "rendezvous": f"{lat_r*1e6:.2f}us",
+                     "rdv/eager": f"{gains[size]:.2f}x"})
+    winning = [s for s in CROSSOVER_SIZES if gains[s] >= 1.0]
+    calibrated = max(winning) if winning else 0
+    claims = [
+        Claim("Fig3b", "latency crossover: eager wins at least up to 16KiB", 16384.0, float(calibrated)),
+        Claim("Fig3b", "eager cuts the 16KiB hop (rendezvous round trip saved)", 1.05, gains[16384]),
+    ]
+    return rows, {"latency_gain_rdv_over_eager": gains, "calibrated_threshold": calibrated}, claims
 
 
 def run(fast: bool = False) -> dict:
@@ -66,9 +104,15 @@ def run(fast: bool = False) -> dict:
     e_rows, e_lat, e_claims = eager_latency_sweep(fast=fast)
     claims += e_claims
     print(table(e_rows, ["threshold", "16KiB_hop"], "Protocol engine: eager-threshold latency sweep"))
+    x_rows, x_data, x_claims = crossover_latency_sweep(fast=fast)
+    claims += x_claims
+    print(table(x_rows, ["size", "eager", "rendezvous", "rdv/eager"],
+                f"Latency crossover (calibrated threshold: {x_data['calibrated_threshold']} B)"))
     print(table([c.row() for c in claims], ["figure", "claim", "paper", "achieved", "status"]))
     payload = {"latency": {k: {str(n): x for n, x in v.items()} for k, v in data.items()},
                "eager_hop_latency": e_lat,
+               "crossover": {"latency_gain_rdv_over_eager": {str(s): g for s, g in x_data["latency_gain_rdv_over_eager"].items()},
+                             "calibrated_threshold": x_data["calibrated_threshold"]},
                "claims": [c.row() for c in claims]}
     save_result("latency", payload)
     return payload

@@ -7,9 +7,13 @@ the full suite: every parcelport variant must deliver a mixed-size payload
 set and quiesce (bounded drain — a deadlock or lost parcel fails the run),
 the bounded-injection fabric must exercise backpressure and still deliver,
 the eager path must use strictly fewer fabric messages than rendezvous for
-sub-threshold parcels, and a small DES flood must complete on the main
-variants.  Results land in ``experiments/bench/smoke.json`` (the CI
-artifact) and the exit code is non-zero on any failure.
+sub-threshold parcels, a small DES flood must complete on the main variants
+(including ``lci_agg_eager``) with ZERO backpressure under the unbounded
+model, and a small-queue DES config must report nonzero
+``backpressure_events`` while still delivering everything with the send
+ring never exceeding its depth.  Results land in
+``experiments/bench/smoke.json`` (the CI artifact) and the exit code is
+non-zero on any failure.
 """
 from __future__ import annotations
 
@@ -47,7 +51,7 @@ BENCHMARKS = {
 
 SMOKE_SEED = 0  # deterministic: the workloads take explicit seeds, no RNG here
 SMOKE_PAYLOAD_SIZES = (8, 600, 3_000, 12_000, 40_000)
-SMOKE_DES_VARIANTS = ("lci", "lci_eager_64k", "lci_noeager", "mpi", "mpi_a")
+SMOKE_DES_VARIANTS = ("lci", "lci_eager_64k", "lci_noeager", "lci_agg_eager", "mpi", "mpi_a")
 
 
 def _smoke_core_variant(name: str, fabric_kwargs=None) -> dict:
@@ -118,10 +122,44 @@ def smoke() -> int:
             results["des"][name] = {"delivered": res.messages, "rate": res.rate}
             if res.messages != 200:
                 raise RuntimeError(f"DES {name} delivered {res.messages}/200")
+            if res.backpressure_events != 0:
+                raise RuntimeError(f"DES {name}: unbounded model reported backpressure")
             print(f"smoke des   {name:16s} ok  ({res.rate/1e6:.2f}M/s)")
         except Exception as exc:  # noqa: BLE001
             traceback.print_exc()
             failures.append(f"des:{name}: {exc}")
+
+    # 5. DES bounded injection: a small-queue config must exercise
+    # backpressure, throttle, and still deliver everything
+    try:
+        import dataclasses
+
+        from repro.amtsim.parcelport_sim import sim_config_for_variant
+
+        bounded_cfg = dataclasses.replace(
+            sim_config_for_variant("lci"),
+            name="lci_bounded",
+            send_queue_depth=2,
+            bounce_buffers=2,
+            bounce_buffer_size=16_384,
+        )
+        res = flood(bounded_cfg, msg_size=64, nthreads=4, nmsgs=200, max_seconds=2.0)
+        results["des_bounded"] = {
+            "delivered": res.messages,
+            "backpressure_events": res.backpressure_events,
+            "send_queue_hw": res.send_queue_hw,
+            "retry_queue_hw": res.retry_queue_hw,
+        }
+        if res.messages != 200:
+            raise RuntimeError(f"DES bounded delivered {res.messages}/200")
+        if res.backpressure_events <= 0:
+            raise RuntimeError("DES bounded config produced no backpressure events")
+        if res.send_queue_hw > 2:
+            raise RuntimeError(f"DES send ring exceeded its depth ({res.send_queue_hw} > 2)")
+        print(f"smoke des   bounded lci      ok  ({res.backpressure_events} backpressure events)")
+    except Exception as exc:  # noqa: BLE001
+        traceback.print_exc()
+        failures.append(f"des_bounded: {exc}")
 
     results["failures"] = failures
     results["elapsed"] = time.time() - t0

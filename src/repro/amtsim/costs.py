@@ -9,6 +9,16 @@ overheads, HDR-IB wire rates).  EXPERIMENTS.md records the validation.
 
 Platform constants model the NIC/wire; mechanism constants model the
 software stack the paper varies.
+
+**Modeled:** per-operation software costs (posting, matching, completion
+objects, locks with per-waiter contention penalties, MPI_Test serialization,
+aggregation merge, serialization per byte) and the injection-side costs of
+resource exhaustion (``t_post_eagain`` — a refused post under the bounded
+fabric of :mod:`repro.amtsim.parcelport_sim`).  **Abstracted away:** cache
+geometry, NUMA, and instruction-level behaviour — every such effect is
+folded into one calibrated scalar per mechanism.  Changing a constant here
+re-calibrates every benchmark claim downstream; EXPERIMENTS.md records the
+validation runs that anchor the current values.
 """
 from __future__ import annotations
 
@@ -78,6 +88,11 @@ class Mechanisms:
     # MPI-specific (§3.3.2, §3.3.4)
     t_mpi_test: float = 0.60 * US  # MPI_Test incl. implicit progress entry
     t_mpi_big_lock: float = 0.10 * US  # serialized section per MPI call
+
+    # bounded injection (§3.3.4): a post refused by a full send ring or an
+    # exhausted bounce-buffer pool still costs the failed descriptor write /
+    # pool probe before the library parks the post for retry
+    t_post_eagain: float = 0.03 * US
 
     # locks (§5.3).  Beyond FIFO serialization, every blocking acquisition
     # pays a penalty per waiter queued behind the lock — cache-line

@@ -10,6 +10,20 @@ Generator processes yield simulation primitives:
 Locks also expose ``try_acquire()`` (immediate, no yield) for try-lock
 modeling.  The kernel is deliberately tiny — just enough to model thread
 contention, queue service, and message timing for the parcelport study.
+
+**What is modeled:** virtual time, deterministic event ordering (ties break
+by schedule order), FIFO lock hand-off with a contention counter, and
+queue-occupancy high-water marks on stores (the observability hook the
+bounded-injection model reports through).  **What is abstracted away:**
+preemption (a process runs until it yields), memory hierarchy, and real OS
+scheduling — their *costs* are charged explicitly by the layer above
+(:mod:`repro.amtsim.costs`), never inferred here.
+
+Determinism is a contract: two runs of the same workload produce identical
+event sequences, which the test suite asserts and the benchmark claims rely
+on.  Resource *boundedness* is likewise not this kernel's job — finite send
+rings and bounce pools live in :mod:`repro.amtsim.parcelport_sim`, which
+models refusal/park/retry with plain state plus ``Timeout`` charges.
 """
 from __future__ import annotations
 
@@ -94,14 +108,19 @@ class Acquire:
 
 
 class Store:
-    """Unbounded FIFO store; Get blocks until an item arrives."""
+    """Unbounded FIFO store; Get blocks until an item arrives.
 
-    __slots__ = ("env", "items", "_getters")
+    Tracks its occupancy high-water mark (``max_depth``) so models built on
+    top can report queue-depth statistics — e.g. run-queue backlog or the
+    parcelport's aggregation queues — without instrumenting every put."""
+
+    __slots__ = ("env", "items", "_getters", "max_depth")
 
     def __init__(self, env: "Env"):
         self.env = env
         self.items: Deque[Any] = deque()
         self._getters: Deque[Generator] = deque()
+        self.max_depth = 0
 
     def put(self, item: Any) -> None:
         if self._getters:
@@ -109,6 +128,8 @@ class Store:
             self.env._resume(proc, item)
         else:
             self.items.append(item)
+            if len(self.items) > self.max_depth:
+                self.max_depth = len(self.items)
 
     def get_nowait(self) -> Optional[Any]:
         if self.items:

@@ -23,13 +23,38 @@ header, allocates buffers, posts the receive, and only then does the wire
 carry the payload — the same extra round both real parcelports pay for
 unexpected large transfers, applied to both families equally.
 
+**Bounded injection** (paper §3.3.4) mirrors the functional fabric
+(:mod:`repro.core.fabric`): each device may have a finite send ring
+(``SimConfig.send_queue_depth``) and a finite pool of registered bounce
+buffers for eager messages (``bounce_buffers`` × ``bounce_buffer_size``).
+A post that finds the ring full or the pool empty is refused EAGAIN-style
+(cost ``t_post_eagain``), counted in ``SimWorld.backpressure_events``, and
+parked in a per-device retry queue that background work drains under a
+``retry_budget`` — the sender-side throttle the paper credits for LCI's
+small-message robustness.  A ring slot stays occupied from post until the
+*send completion is reaped* by the progress engine, so a rank that stops
+polling its own CQ throttles its own injection, exactly like real hardware.
+Occupancy high-water marks (send ring, bounce pool, retry queue) are
+reported by :meth:`SimWorld.injection_stats`.  Both limits default to 0
+(unbounded): the classic model is unchanged unless a config opts in, and
+send completions are only materialized as CQ traffic in bounded mode.
+
+**Modeled:** thread overlap/contention, per-mechanism software costs, wire
+serialization, protocol round trips, aggregation (optionally packed up to
+the eager threshold via ``agg_eager`` so an aggregate never spills from
+eager into rendezvous), and injection-resource exhaustion.  **Abstracted
+away:** real payload bytes (sizes are integers; serialization is a per-byte
+cost), wire-level framing overhead, NIC descriptor formats, and memory
+registration (a bounce buffer is a counter, not memory).
+
 Variant names match :mod:`repro.core.variants`, so benchmarks sweep the same
 configuration space as the paper's Figs 3-9.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Generator, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, Generator, List, Optional, Tuple
 
 from ..core.device import LockMode
 from ..core.lci_parcelport import LCIPPConfig
@@ -64,6 +89,24 @@ class SimConfig:
     # (bounce-buffer copy cost, no rendezvous round trip); 0 disables the
     # eager path beyond plain header piggybacking.
     eager_threshold: int = PIGGYBACK_LIMIT
+    # Threshold-aware aggregation (mirrors LCIPPConfig.agg_eager): the
+    # aggregation drain packs parcels into batches of at most
+    # eager_threshold bytes, so each aggregate still ships eager.
+    agg_eager: bool = False
+    # Bounded injection (mirrors the functional fabric's knobs, §3.3.4):
+    # finite per-device send ring (0 = unbounded, the classic model) and a
+    # finite per-device pool of pre-registered bounce buffers for eager
+    # messages (0 = no pool).  A refused post costs t_post_eagain and parks
+    # in a per-device retry queue drained by background work.
+    send_queue_depth: int = 0
+    bounce_buffers: int = 0
+    bounce_buffer_size: int = 64 * 1024
+    # Parked posts retried per background_work call (sender-side throttle).
+    retry_budget: int = 8
+
+    @property
+    def bounded_injection(self) -> bool:
+        return self.send_queue_depth > 0 or self.bounce_buffers > 0
 
 
 def sim_config_for_variant(name: str) -> SimConfig:
@@ -84,6 +127,7 @@ def sim_config_for_variant(name: str) -> SimConfig:
         lock_mode=cfg.lock_mode,
         progress_mode=cfg.progress_mode,
         eager_threshold=cfg.eager_threshold,
+        agg_eager=cfg.agg_eager,
     )
 
 
@@ -104,6 +148,10 @@ class _Message:
     kind: str  # 'header' | 'followup'
     size: int
     parcel: "ParcelOp"
+    # eager messages travel through a registered bounce buffer: under
+    # bounded injection they hold one pool buffer from post until the send
+    # completion is reaped.
+    eager: bool = False
 
 
 @dataclass
@@ -141,9 +189,30 @@ class ParcelOp:
 
 
 class _SimDevice:
-    """One set of communication resources: injection channel + hardware CQ."""
+    """One set of communication resources: injection channel + hardware CQ.
 
-    __slots__ = ("env", "rank", "index", "inj_lock", "coarse", "cq", "stats_injected")
+    Under bounded injection the device mirrors the functional fabric's
+    :class:`~repro.core.fabric.NetDevice`: a finite send ring (``inflight``
+    slots, freed when the send completion is reaped from this device's CQ)
+    and a finite bounce-buffer pool for eager messages.  Refused posts park
+    in ``parked`` until background work retries them."""
+
+    __slots__ = (
+        "env",
+        "rank",
+        "index",
+        "inj_lock",
+        "coarse",
+        "cq",
+        "stats_injected",
+        "inflight",
+        "inflight_hw",
+        "bounce_free",
+        "bounce_in_use_hw",
+        "parked",
+        "parked_hw",
+        "stats_backpressure",
+    )
 
     def __init__(self, env: Env, rank: "SimRank", index: int):
         self.env = env
@@ -153,6 +222,14 @@ class _SimDevice:
         self.coarse = Lock(env)  # coarse library lock (block/try variants)
         self.cq: List[Tuple[str, _Message]] = []
         self.stats_injected = 0
+        # bounded-injection state (§3.3.4)
+        self.inflight = 0  # occupied send-ring slots
+        self.inflight_hw = 0  # send-queue occupancy high-water mark
+        self.bounce_free = rank.world.cfg.bounce_buffers  # free pool buffers
+        self.bounce_in_use_hw = 0  # bounce-pool occupancy high-water mark
+        self.parked: Deque[_Message] = deque()  # EAGAIN'd posts awaiting retry
+        self.parked_hw = 0  # retry-queue depth high-water mark
+        self.stats_backpressure = 0
 
 
 class SimRank:
@@ -254,6 +331,7 @@ class SimWorld:
         self.stopped = False
         self.msg_count = 0
         self.byte_count = 0
+        self.backpressure_events = 0  # EAGAIN-style post refusals (§3.3.4)
         for r in self.ranks:
             for w in range(workers_per_rank):
                 wk = SimWorker(r, w)
@@ -271,6 +349,23 @@ class SimWorld:
                 yield Timeout(0.3e-6)
 
     # --------------------------------------------------------------- helpers
+    def injection_stats(self) -> Dict[str, int]:
+        """Aggregate bounded-injection counters across every device:
+        refusal count plus occupancy high-water marks for the send ring,
+        the bounce pool, and the parked-post retry queue."""
+        stats = {
+            "backpressure_events": self.backpressure_events,
+            "send_queue_hw": 0,
+            "bounce_in_use_hw": 0,
+            "retry_queue_hw": 0,
+        }
+        for rank in self.ranks:
+            for dev in rank.devices:
+                stats["send_queue_hw"] = max(stats["send_queue_hw"], dev.inflight_hw)
+                stats["bounce_in_use_hw"] = max(stats["bounce_in_use_hw"], dev.bounce_in_use_hw)
+                stats["retry_queue_hw"] = max(stats["retry_queue_hw"], dev.parked_hw)
+        return stats
+
     def _lock_with_contention(self, lock: Lock) -> Generator:
         """Blocking acquire + per-waiter contention penalty (cache-line
         bouncing / futex wake cost grows with the number of contenders)."""
@@ -306,17 +401,49 @@ class SimWorld:
             drained = list(q)
             q.clear()
             rank.agg_lock.release()
-            yield from self._send_aggregate(worker, drained)
+            for batch in self._agg_batches(drained):
+                yield from self._send_aggregate(worker, batch)
             yield Acquire(rank.agg_lock)
         rank.agg_draining[op.dst] = False
         rank.agg_lock.release()
 
+    def _agg_batches(self, drained: List[ParcelOp]) -> List[List[ParcelOp]]:
+        """Threshold-aware drain (mirrors ``Parcelport._agg_batches``):
+        with ``agg_eager`` the drained queue packs greedily into batches of
+        at most ``eager_threshold`` payload bytes, so each aggregate still
+        ships as one eager message instead of spilling into rendezvous.
+        An op alone over the budget gets its own batch (rendezvous
+        regardless).  Classic mode: one batch, unbounded merge."""
+        cfg = self.cfg
+        if not (cfg.agg_eager and cfg.eager_threshold > 0):
+            return [drained]
+        budget = cfg.eager_threshold
+        batches: List[List[ParcelOp]] = []
+        cur: List[ParcelOp] = []
+        cur_bytes = 0
+        for op in drained:
+            if cur and cur_bytes + op.size > budget:
+                batches.append(cur)
+                cur, cur_bytes = [], 0
+            cur.append(op)
+            cur_bytes += op.size
+        if cur:
+            batches.append(cur)
+        return batches
+
     def _send_aggregate(self, worker: SimWorker, ops: List[ParcelOp]) -> Generator:
         """Small (piggyback-eligible) parts merge into one nzc chunk;
-        zero-copy chunks cannot merge (paper §4.2.2) and stay follow-ups."""
+        zero-copy chunks cannot merge (paper §4.2.2) and stay follow-ups.
+        Under ``agg_eager`` the merge eligibility extends to the eager
+        threshold: anything the protocol engine would ship eager on its own
+        may coalesce into the one bounce-buffered eager message."""
+        cfg = self.cfg
+        merge_limit = (
+            cfg.eager_threshold if (cfg.agg_eager and cfg.eager_threshold > 0) else PIGGYBACK_LIMIT
+        )
         first = ops[0]
-        small = sum(op.size for op in ops if op.size <= PIGGYBACK_LIMIT)
-        big = [op.size for op in ops if op.size > PIGGYBACK_LIMIT]
+        small = sum(op.size for op in ops if op.size <= merge_limit)
+        big = [op.size for op in ops if op.size > merge_limit]
         agg = ParcelOp(src=first.src, dst=first.dst, size=small, nparcels=len(ops))
         agg.send_time = min(op.send_time for op in ops)
         agg.followup_chunks = big  # zc chunks cannot merge — stay separate
@@ -339,8 +466,13 @@ class SimWorld:
         # Protocol selection: one-message limit is the piggyback limit, or
         # the eager threshold when the eager path extends past it.  Eager
         # shipment beyond the plain piggyback limit pays the bounce-buffer
-        # copy (memcpy-bound) instead of the rendezvous round trip.
+        # copy (memcpy-bound) instead of the rendezvous round trip.  With a
+        # finite bounce pool the eager message must also FIT a bounce
+        # buffer, or the post could never succeed (mirrors
+        # ``LCIParcelport._use_eager``'s capacity check).
         one_msg_limit = max(PIGGYBACK_LIMIT, cfg.eager_threshold) if cfg.eager_threshold > 0 else PIGGYBACK_LIMIT
+        if cfg.bounce_buffers > 0:
+            one_msg_limit = min(one_msg_limit, cfg.bounce_buffer_size - HEADER_BYTES)
         if op.size > one_msg_limit:
             op.followup_chunks = [op.size] + op.followup_chunks
             piggy = 0
@@ -348,6 +480,9 @@ class SimWorld:
             piggy = op.size
             if op.size > PIGGYBACK_LIMIT:
                 yield Timeout(mech.t_serialize_per_byte * op.size)
+        # an eager message (whole parcel in one shot, no follow-ups) draws a
+        # registered bounce buffer while in flight
+        eager = cfg.eager_threshold > 0 and piggy == op.size and not op.followup_chunks
         # Lock discipline.  Sends take the coarse lock *blocking* even in the
         # 'try' variants — paper footnote 1: only progress can use try locks.
         locked = cfg.mpi or cfg.lock_mode in (LockMode.BLOCK, LockMode.TRY)
@@ -356,7 +491,7 @@ class SimWorld:
             if cfg.mpi:
                 yield Timeout(mech.t_mpi_big_lock)
         yield Timeout(mech.t_post_send)
-        yield from self._inject(dev, _Message("header", HEADER_BYTES + piggy, op))
+        yield from self._inject(dev, _Message("header", HEADER_BYTES + piggy, op, eager=eager))
         if locked:
             dev.coarse.release()
         if cfg.mpi:
@@ -365,7 +500,68 @@ class SimWorld:
             self.ranks[op.src].mpi_pool.append(_MPIReq("send", op, done=True))
         self.ranks[op.src].sent += op.nparcels
 
+    # -- bounded injection (§3.3.4) ----------------------------------------
+    def _claim_slot(self, dev: _SimDevice, msg: _Message) -> bool:
+        """Reserve a send-ring slot (+ bounce buffer for eager messages).
+        A refusal is an EAGAIN-style backpressure event, counted on the
+        device and the world."""
+        cfg = self.cfg
+        if cfg.send_queue_depth and dev.inflight >= cfg.send_queue_depth:
+            dev.stats_backpressure += 1
+            self.backpressure_events += 1
+            return False
+        if msg.eager and cfg.bounce_buffers > 0:
+            if dev.bounce_free <= 0:
+                dev.stats_backpressure += 1
+                self.backpressure_events += 1
+                return False
+            dev.bounce_free -= 1
+            dev.bounce_in_use_hw = max(dev.bounce_in_use_hw, cfg.bounce_buffers - dev.bounce_free)
+        dev.inflight += 1
+        dev.inflight_hw = max(dev.inflight_hw, dev.inflight)
+        return True
+
+    def _release_slot(self, dev: _SimDevice, msg: _Message) -> None:
+        """Reap one send completion: free the ring slot and recycle the
+        bounce buffer (the moment new injection capacity appears)."""
+        dev.inflight -= 1
+        if msg.eager and self.cfg.bounce_buffers > 0:
+            dev.bounce_free += 1
+
+    def _park(self, dev: _SimDevice, msg: _Message) -> None:
+        dev.parked.append(msg)
+        dev.parked_hw = max(dev.parked_hw, len(dev.parked))
+
+    def _drain_parked(self, dev: _SimDevice) -> Generator:
+        """Retry up to ``retry_budget`` parked posts, oldest first; stop at
+        the first refusal (the fabric freed nothing — throttle instead of
+        hammering, mirroring ``LCIParcelport._drain_retries``)."""
+        moved = False
+        for _ in range(self.cfg.retry_budget):
+            if not dev.parked:
+                break
+            msg = dev.parked[0]
+            if not self._claim_slot(dev, msg):
+                yield Timeout(self.mech.t_post_eagain)
+                break
+            dev.parked.popleft()
+            yield from self._inject_claimed(dev, msg)
+            moved = True
+        return moved
+
     def _inject(self, dev: _SimDevice, msg: _Message) -> Generator:
+        """Post one message.  Unbounded devices always accept (the classic
+        model).  Bounded devices may refuse EAGAIN-style: the post costs
+        the failed attempt (``t_post_eagain``) and parks in the device's
+        retry queue for background work to drain once completions free
+        ring slots or bounce buffers."""
+        if self.cfg.bounded_injection and not self._claim_slot(dev, msg):
+            yield Timeout(self.mech.t_post_eagain)
+            self._park(dev, msg)
+            return
+        yield from self._inject_claimed(dev, msg)
+
+    def _inject_claimed(self, dev: _SimDevice, msg: _Message) -> Generator:
         """Occupy the injection channel (per-device descriptor/doorbell
         cost), queue the payload on the rank's shared wire (bandwidth is a
         per-NIC resource even with many devices), schedule the arrival."""
@@ -385,10 +581,20 @@ class SimWorld:
         dst_rank = self.ranks[msg.parcel.dst]
         dst_dev = dst_rank.devices[msg.parcel.src_dev_idx % len(dst_rank.devices)]
         self.env.process(self._arrive_later(dst_dev, msg, done - now + plat.wire_latency))
+        if self.cfg.bounded_injection:
+            # the send completion lands in OUR hardware CQ once the DMA
+            # drains off the ring; the slot stays occupied until progress
+            # reaps it — not polling your own CQ throttles your injection,
+            # exactly like the functional fabric (NetDevice.poll_cq).
+            self.env.process(self._send_done_later(dev, msg, done - now))
 
     def _arrive_later(self, dst_dev: _SimDevice, msg: _Message, delay: float) -> Generator:
         yield Timeout(delay)
         dst_dev.cq.append((msg.kind, msg))
+
+    def _send_done_later(self, dev: _SimDevice, msg: _Message, delay: float) -> Generator:
+        yield Timeout(delay)
+        dev.cq.append(("send_done", msg))
 
     # -------------------------------------------------------------- progress
     def background_work(self, worker: SimWorker) -> Generator:
@@ -415,6 +621,10 @@ class SimWorld:
         moved = yield from self._progress_device(worker, dev)
         if cfg.lock_mode in (LockMode.BLOCK, LockMode.TRY):
             dev.coarse.release()
+        if dev.parked:
+            # progress reaped send completions above, so ring slots / bounce
+            # buffers may have freed: retry parked posts under the budget
+            moved = (yield from self._drain_parked(dev)) or moved
         return moved
 
     def _progress_device(self, worker: SimWorker, dev: _SimDevice) -> Generator:
@@ -442,6 +652,12 @@ class SimWorld:
         mech, cfg = self.mech, self.cfg
         op = msg.parcel
         rank = worker.rank
+        if kind == "send_done":
+            # reaping the send completion frees the ring slot / bounce
+            # buffer (bounded-injection mode only; t_per_completion already
+            # charged by the progress loop)
+            self._release_slot(dev, msg)
+            return
         if kind == "header":
             if cfg.header_mode == "put":
                 # dynamic put: no matching; buffer goes straight to the client
@@ -569,7 +785,9 @@ class SimWorld:
         while dev.cq:
             kind, msg = dev.cq.pop(0)
             yield Timeout(mech.t_per_completion)
-            if kind == "header":
+            if kind == "send_done":
+                self._release_slot(dev, msg)
+            elif kind == "header":
                 if rank.mpi_header_req is None:
                     rank.mpi_header_req = msg  # matches the pre-posted recv
                 else:
@@ -619,6 +837,10 @@ class SimWorld:
                         self._spawn_followup(op)
                     else:
                         to_deliver.append(op)
+        if dev.parked:
+            # MPI flushes its internal backpressure queue while it holds the
+            # big lock (mirrors MPISim's FIFO of refused sends)
+            moved = (yield from self._drain_parked(dev)) or moved
         dev.coarse.release()
         rank.pool_lock.release()
         for op in to_deliver:  # handle_parcel runs outside the library

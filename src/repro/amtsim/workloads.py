@@ -30,6 +30,11 @@ class MicroResult:
     nthreads: int
     elapsed: float
     messages: int
+    # bounded-injection counters (zero under the classic unbounded model):
+    # EAGAIN refusals plus the send-ring / retry-queue occupancy high waters
+    backpressure_events: int = 0
+    send_queue_hw: int = 0
+    retry_queue_hw: int = 0
 
     @property
     def rate(self) -> float:
@@ -45,6 +50,7 @@ class AppResult:
     tasks: int
     messages: int
     bytes: int
+    backpressure_events: int = 0
 
 
 def _world(variant: str, n_ranks: int, workers: int, platform: Platform, mech: Mechanisms) -> SimWorld:
@@ -84,12 +90,16 @@ def flood(
         world.spawn(0, Task(action=sender_action))
     world.run(until=max_seconds)
     elapsed = state["t_done"] if state["t_done"] is not None else world.env.now
+    inj = world.injection_stats()
     return MicroResult(
         variant=variant if isinstance(variant, str) else variant.name,
         msg_size=msg_size,
         nthreads=nthreads,
         elapsed=max(elapsed, 1e-12),
         messages=state["delivered"],
+        backpressure_events=inj["backpressure_events"],
+        send_queue_hw=inj["send_queue_hw"],
+        retry_queue_hw=inj["retry_queue_hw"],
     )
 
 
@@ -140,12 +150,16 @@ def chains(
         world.spawn(0, Task(action=first_send(c)))
     world.run(until=max_seconds)
     hops = total_steps if remaining["chains"] == 0 else max(1, total_steps - remaining["chains"] * nsteps)
+    inj = world.injection_stats()
     return MicroResult(
         variant=variant if isinstance(variant, str) else variant.name,
         msg_size=msg_size,
         nthreads=nthreads,
         elapsed=world.env.now / hops * nchains,  # per-hop latency per chain
         messages=hops,
+        backpressure_events=inj["backpressure_events"],
+        send_queue_hw=inj["send_queue_hw"],
+        retry_queue_hw=inj["retry_queue_hw"],
     )
 
 
@@ -246,6 +260,7 @@ def octotiger(
         tasks=done_tasks["n"],
         messages=world.msg_count,
         bytes=world.byte_count,
+        backpressure_events=world.backpressure_events,
     )
 
 

@@ -27,6 +27,12 @@ Techniques (paper Table 1) and the flag that controls each:
 * **Progress** — ``progress_mode='explicit'`` invokes the device progress
   engine on every ``background_work``; ``'implicit'`` only when a
   completion poll comes back empty (the MPI behaviour).
+* **Aggregation** — ``aggregation`` merges same-destination parcels
+  (paper §2.2.2); ``agg_eager`` additionally makes the merge
+  threshold-aware: the drain packs parcels into aggregates whose projected
+  size stays within ``eager_threshold``, so a batch of eager-sized parcels
+  fills at most one bounce buffer and never accidentally crosses onto the
+  rendezvous path (the ``lci_agg_eager`` variant).
 
 Invariant that makes the queue-based path lock-free at this layer: chunks of
 one parcel transfer sequentially, so at most one completion record per
@@ -84,6 +90,11 @@ class LCIPPConfig:
     eager_threshold: int = HEADER_PIGGYBACK_LIMIT
     # Sender-side throttle: backpressured posts retried per background_work.
     retry_budget: int = 8
+    # Threshold-aware aggregation: the drain packs parcels into aggregates
+    # whose projected size stays within eager_threshold (fill one bounce
+    # buffer, never spill an eager-sized batch into rendezvous).  Only
+    # meaningful with aggregation=True and eager_threshold > 0.
+    agg_eager: bool = False
 
     def variant(self, **kw) -> "LCIPPConfig":
         return replace(self, **kw)
@@ -114,7 +125,8 @@ class _RecvOp:
 class LCIParcelport(Parcelport):
     def __init__(self, locality: Locality, fabric: Fabric, config: Optional[LCIPPConfig] = None):
         config = config or LCIPPConfig()
-        super().__init__(locality, aggregation=config.aggregation)
+        agg_limit = config.eager_threshold if (config.agg_eager and config.eager_threshold > 0) else 0
+        super().__init__(locality, aggregation=config.aggregation, agg_limit_bytes=agg_limit)
         self.cfg = config
         rank = locality.rank
         # The shared completion queue (across devices, to reduce load

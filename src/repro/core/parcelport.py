@@ -13,6 +13,17 @@ and the upper layer provides::
 Also implements HPX **parcel aggregation** (paper §2.2.2): one parcel queue
 per destination; a send enqueues then drains-and-merges everything pending
 for that destination into a single aggregate parcel.
+
+Aggregation can be **threshold-aware** (``agg_limit_bytes``): instead of
+merging the whole queue into one arbitrarily large aggregate — which silently
+pushes a pile of eager-sized parcels over the protocol engine's
+``eager_threshold`` and onto the rendezvous path — the drain packs parcels
+greedily (FIFO order) into aggregates whose projected serialized size stays
+within the limit.  With the limit set to the eager threshold, every
+aggregate built from eager-sized parcels still ships as ONE eager message
+(it fills at most one bounce buffer); a single parcel already over the limit
+forms its own batch and takes the rendezvous path it would have taken
+anyway.  ``agg_limit_bytes=0`` keeps the classic unbounded merge.
 """
 from __future__ import annotations
 
@@ -32,7 +43,14 @@ from .parcel import (
     zc_sizes_from_nzc,
 )
 
-__all__ = ["Parcelport", "Locality", "World", "aggregate_parcels", "split_aggregate"]
+__all__ = [
+    "Parcelport",
+    "Locality",
+    "World",
+    "aggregate_parcels",
+    "aggregate_projected_bytes",
+    "split_aggregate",
+]
 
 AGG_MAGIC = 0xA6
 
@@ -45,6 +63,18 @@ AGG_MAGIC = 0xA6
 # as ids were dense or an aggregate held >= 1000 parcels).
 AGG_SUB_SHIFT = 48
 AGG_MAX_PARCELS = (1 << 16) - 1
+
+# Serialized-aggregate framing overhead: the <BI> preamble plus one <II>
+# record per member parcel (see aggregate_parcels).  aggregate_projected_bytes
+# must stay in lockstep with the actual encoder.
+AGG_PREAMBLE_BYTES = 5
+AGG_PER_PARCEL_BYTES = 8
+
+
+def aggregate_projected_bytes(parcels: Sequence[Parcel]) -> int:
+    """``total_bytes`` the aggregate of ``parcels`` will have, without
+    building it — the threshold-aware drain sizes batches with this."""
+    return AGG_PREAMBLE_BYTES + sum(AGG_PER_PARCEL_BYTES + p.total_bytes for p in parcels)
 
 
 def aggregate_parcels(parcels: Sequence[Parcel]) -> Parcel:
@@ -99,13 +129,17 @@ def split_aggregate(parcel: Parcel) -> List[Parcel]:
 class Parcelport:
     """Abstract parcelport (one per communication library per locality)."""
 
-    def __init__(self, locality: "Locality", aggregation: bool = False):
+    def __init__(self, locality: "Locality", aggregation: bool = False, agg_limit_bytes: int = 0):
         self.locality = locality
         self.aggregation = aggregation
+        # Threshold-aware aggregation: max projected aggregate size per
+        # batch (0 = classic unbounded merge).
+        self.agg_limit_bytes = agg_limit_bytes
         self._agg_queues: Dict[int, deque] = {}
         self._agg_lock = threading.Lock()
         self.stats_sent = 0
         self.stats_received = 0
+        self.stats_agg_batches = 0  # threshold-aware drains that split
 
     # -- public API (Listing 2) ---------------------------------------------
     def send(self, dest: int, parcel: Parcel, cb: Optional[SendCallback] = None) -> None:
@@ -120,11 +154,44 @@ class Parcelport:
             q.clear()
         if not drained:
             return
-        if len(drained) == 1:
-            self._send_impl(dest, drained[0][0], drained[0][1])
+        batches = self._agg_batches(drained)
+        if len(batches) > 1:
+            self.stats_agg_batches += len(batches)
+        for batch in batches:
+            self._send_batch(dest, batch)
+
+    def _agg_batches(self, drained: List[tuple]) -> List[List[tuple]]:
+        """Split the drained queue into aggregate batches.
+
+        Unbounded mode returns one batch (everything merges).  With
+        ``agg_limit_bytes`` set, parcels pack greedily in FIFO order until
+        the projected aggregate size (:func:`aggregate_projected_bytes`)
+        would exceed the limit — so an aggregate of eager-sized parcels
+        never spills past the eager threshold into rendezvous.  A parcel
+        that alone exceeds the limit gets its own batch (it is rendezvous
+        traffic regardless)."""
+        if self.agg_limit_bytes <= 0:
+            return [drained]
+        batches: List[List[tuple]] = []
+        cur: List[tuple] = []
+        cur_bytes = AGG_PREAMBLE_BYTES
+        for p, cb in drained:
+            need = AGG_PER_PARCEL_BYTES + p.total_bytes
+            if cur and cur_bytes + need > self.agg_limit_bytes:
+                batches.append(cur)
+                cur, cur_bytes = [], AGG_PREAMBLE_BYTES
+            cur.append((p, cb))
+            cur_bytes += need
+        if cur:
+            batches.append(cur)
+        return batches
+
+    def _send_batch(self, dest: int, batch: List[tuple]) -> None:
+        if len(batch) == 1:
+            self._send_impl(dest, batch[0][0], batch[0][1])
             return
-        cbs = [c for (_p, c) in drained if c is not None]
-        agg = aggregate_parcels([p for (p, _c) in drained])
+        cbs = [c for (_p, c) in batch if c is not None]
+        agg = aggregate_parcels([p for (p, _c) in batch])
 
         def agg_cb(_parcel: Parcel) -> None:
             for c in cbs:

@@ -90,6 +90,14 @@ for _kib in (16, 64):
     VARIANTS[f"lci_eager_{_kib}k"] = LCIPPConfig(name=f"lci_eager_{_kib}k", eager_threshold=_kib * 1024)
 VARIANTS["lci_eager"] = VARIANTS["lci_eager_16k"].variant(name="lci_eager")
 
+# Threshold-aware aggregation (§2.2.2 x §3.3): merge same-destination
+# parcels, but pack each aggregate only up to the eager threshold so it
+# still ships as ONE eager message (fills one bounce buffer; never spills
+# an eager-sized batch onto the rendezvous path).
+VARIANTS["lci_agg_eager"] = LCIPPConfig(
+    name="lci_agg_eager", aggregation=True, agg_eager=True, eager_threshold=16 * 1024
+)
+
 
 def variant_names():
     return ["mpi", "mpi_a"] + sorted(VARIANTS)

@@ -1,0 +1,150 @@
+"""Threshold-aware aggregation (ISSUE 2 tentpole): the drain packs parcels
+up to ``eager_threshold`` — an aggregate exactly at the threshold ships as
+ONE eager message, one byte over splits the batch, oversize parcels take
+rendezvous alone, and the delivered payload set is identical with
+aggregation disabled, classic, or threshold-aware."""
+from collections import deque
+
+import pytest
+
+from repro.core.harness import deliver_payloads
+from repro.core.lci_parcelport import LCIParcelport, LCIPPConfig
+from repro.core.parcel import Chunk, Parcel, serialize_action
+from repro.core.parcelport import (
+    AGG_PER_PARCEL_BYTES,
+    AGG_PREAMBLE_BYTES,
+    World,
+    aggregate_parcels,
+    aggregate_projected_bytes,
+)
+from repro.core.variants import VARIANTS
+
+
+def _nzc_parcel(pid: int, size: int) -> Parcel:
+    return Parcel(parcel_id=pid, source=0, dest=1, nzc_chunk=Chunk(b"x" * size))
+
+
+def _agg_world(cfg: LCIPPConfig):
+    world = World(2, lambda loc, fab: LCIParcelport(loc, fab, cfg), devices_per_rank=cfg.ndevices)
+    got: list = []
+    world.localities[1].register_action("sink", lambda *a: got.append(a))
+    return world, got
+
+
+def _drain_burst(world, parcels):
+    """Pre-load the per-destination queue (as racing senders would), then
+    one send drains the whole burst through the batching logic."""
+    pp = world.localities[0].parcelport
+    q = pp._agg_queues.setdefault(1, deque())
+    for p in parcels[:-1]:
+        q.append((p, None))
+    pp.send(1, parcels[-1])
+    world.drain()
+    return pp
+
+
+# ------------------------------------------------------- projection helper
+def test_projected_bytes_matches_real_aggregate():
+    parcels = [_nzc_parcel(i, 100 + i) for i in range(4)]
+    agg = aggregate_parcels(parcels)
+    assert aggregate_projected_bytes(parcels) == agg.total_bytes
+
+
+def test_agg_batches_exact_and_one_over():
+    """An aggregate landing exactly on the limit stays one batch; one byte
+    over splits it."""
+    parcels = [(_nzc_parcel(i, 100), None) for i in range(2)]
+    exact = AGG_PREAMBLE_BYTES + 2 * (AGG_PER_PARCEL_BYTES + 100)
+    cfg = LCIPPConfig(name="t", aggregation=True, agg_eager=True, eager_threshold=exact)
+    world, _ = _agg_world(cfg)
+    pp = world.localities[0].parcelport
+    assert len(pp._agg_batches(list(parcels))) == 1
+    pp.agg_limit_bytes = exact - 1
+    assert len(pp._agg_batches(list(parcels))) == 2
+
+
+# ------------------------------------------------- world-level edge cases
+def _sink_parcels(n: int, payload: int):
+    return [
+        serialize_action(1000 + i, 0, 1, "sink", (bytes([i]) * payload,), zero_copy_threshold=1 << 30)
+        for i in range(n)
+    ]
+
+
+def test_aggregate_exactly_at_threshold_ships_one_eager_message():
+    parcels = _sink_parcels(4, 900)
+    need = aggregate_projected_bytes(parcels)
+    cfg = LCIPPConfig(name="t_exact", aggregation=True, agg_eager=True, eager_threshold=need)
+    world, got = _agg_world(cfg)
+    _drain_burst(world, parcels)
+    assert len(got) == 4
+    st = world.fabric.stats
+    assert st.eager_msgs == 1 and st.rendezvous_msgs == 0
+
+
+def test_aggregate_one_byte_over_threshold_splits_without_spilling():
+    """One byte over the threshold: the drain splits into two batches, and
+    BOTH still ship eager — never a rendezvous spill."""
+    parcels = _sink_parcels(4, 900)
+    need = aggregate_projected_bytes(parcels)
+    cfg = LCIPPConfig(name="t_over", aggregation=True, agg_eager=True, eager_threshold=need - 1)
+    world, got = _agg_world(cfg)
+    _drain_burst(world, parcels)
+    assert len(got) == 4
+    st = world.fabric.stats
+    assert st.eager_msgs == 2 and st.rendezvous_msgs == 0
+
+
+def test_oversize_parcel_gets_own_batch_and_rendezvous():
+    """A single parcel over the threshold takes the rendezvous path alone;
+    its eager-sized neighbours still coalesce eagerly."""
+    small = _sink_parcels(3, 900)
+    big = serialize_action(2000, 0, 1, "sink", (b"B" * 40_000,), zero_copy_threshold=1024)
+    cfg = VARIANTS["lci_agg_eager"]
+    world, got = _agg_world(cfg)
+    _drain_burst(world, small[:2] + [big] + small[2:])
+    assert sorted(len(a[0]) for a in got) == [900, 900, 900, 40_000]
+    st = world.fabric.stats
+    assert st.rendezvous_msgs >= 2  # header + zc follow-up for the big one
+    assert st.eager_msgs >= 1  # the small ones still merged eagerly
+
+
+def test_unbounded_merge_spills_same_burst_into_rendezvous():
+    """Control for the above: the classic unbounded merge pushes the same
+    eager-sized burst over the threshold onto the rendezvous path."""
+    parcels = _sink_parcels(32, 3_000)
+    cfg = VARIANTS["lci_agg_eager"].variant(name="t_unbounded", agg_eager=False)
+    world, got = _agg_world(cfg)
+    _drain_burst(world, parcels)
+    assert len(got) == 32
+    assert world.fabric.stats.rendezvous_msgs > 0
+
+    cfg2 = VARIANTS["lci_agg_eager"]
+    world2, got2 = _agg_world(cfg2)
+    _drain_burst(world2, _sink_parcels(32, 3_000))
+    assert len(got2) == 32
+    assert world2.fabric.stats.rendezvous_msgs == 0
+
+
+@pytest.mark.parametrize("other", ["lci", "lci_agg_eager"])
+def test_agg_eager_delivers_identical_payloads(other):
+    """Aggregation disabled vs threshold-aware: identical delivered payload
+    multisets (content, not just lengths)."""
+    payloads = [bytes([i % 251]) * (150 * (i + 1)) for i in range(12)]
+    _, got = deliver_payloads(other, payloads)
+    assert sorted(a[0] for a in got) == sorted(payloads)
+
+
+def test_agg_eager_under_bounded_fabric():
+    """Threshold-aware aggregation composes with bounded injection: tiny
+    ring + pool, burst of eager-sized parcels — backpressure fires, the
+    retry queue drains, everything arrives."""
+    world, got = deliver_payloads(
+        "lci_agg_eager",
+        [bytes([i]) * 2_000 for i in range(40)],
+        fabric_kwargs=dict(send_queue_depth=2, bounce_buffers=2, bounce_buffer_size=32_768),
+    )
+    assert len(got) == 40
+    assert world.fabric.stats.backpressure_events > 0
+    for loc in world.localities:
+        assert loc.parcelport.retry_queue_depth() == 0

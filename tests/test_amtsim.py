@@ -117,6 +117,113 @@ def test_slingshot_lock_penalty():
     assert r_delta < r_exp
 
 
+# ------------------------------------------------------- bounded injection
+def _bounded_cfg(depth=2, bufs=2, buf_size=16_384):
+    import dataclasses
+
+    from repro.amtsim.parcelport_sim import sim_config_for_variant
+
+    return dataclasses.replace(
+        sim_config_for_variant("lci"),
+        name="lci_bounded",
+        send_queue_depth=depth,
+        bounce_buffers=bufs,
+        bounce_buffer_size=buf_size,
+    )
+
+
+def test_des_bounded_injection_backpressure_and_delivery():
+    """The acceptance gate: a small-queue DES config reports nonzero
+    backpressure_events and still delivers everything; the unbounded model
+    reports exactly zero."""
+    r_unbounded = flood("lci", msg_size=64, nthreads=8, nmsgs=400)
+    r_bounded = flood(_bounded_cfg(), msg_size=64, nthreads=8, nmsgs=400)
+    assert r_unbounded.backpressure_events == 0
+    assert r_unbounded.messages == 400
+    assert r_bounded.backpressure_events > 0
+    assert r_bounded.messages == 400  # throttled, never lost
+    # the ring depth is a hard bound, and parked posts actually queued up
+    assert 0 < r_bounded.send_queue_hw <= 2
+    assert r_bounded.retry_queue_hw > 0
+
+
+def test_des_bounded_injection_deterministic():
+    r1 = flood(_bounded_cfg(), msg_size=64, nthreads=8, nmsgs=300)
+    r2 = flood(_bounded_cfg(), msg_size=64, nthreads=8, nmsgs=300)
+    assert (r1.elapsed, r1.messages, r1.backpressure_events) == (
+        r2.elapsed,
+        r2.messages,
+        r2.backpressure_events,
+    )
+
+
+def test_des_bounded_injection_throttles_rate():
+    """Backpressure is a cost, not a free pass: the bounded config cannot
+    outrun the unbounded one (the paper's contention-mitigation regime —
+    injection is limited by resource recycling, Figs 3/8)."""
+    r_u = flood("lci", msg_size=64, nthreads=16, nmsgs=1000)
+    r_b = flood(_bounded_cfg(depth=1, bufs=1), msg_size=64, nthreads=16, nmsgs=1000)
+    assert r_b.messages == 1000
+    assert r_b.rate < r_u.rate
+
+
+def test_des_bounded_mpi_path_delivers():
+    import dataclasses
+
+    from repro.amtsim.parcelport_sim import sim_config_for_variant
+
+    cfg = dataclasses.replace(sim_config_for_variant("mpi"), name="mpi_bounded", send_queue_depth=1)
+    r = flood(cfg, msg_size=64, nthreads=4, nmsgs=150)
+    assert r.messages == 150
+    assert r.backpressure_events > 0
+
+
+def test_des_bounded_chains_complete():
+    r = chains(_bounded_cfg(depth=1, bufs=1), msg_size=64, nchains=8, nsteps=10, nthreads=8)
+    assert r.messages == 80
+
+
+def test_des_eager_capped_by_bounce_buffer_size():
+    """A payload under the eager threshold but over the bounce-buffer size
+    must take rendezvous instead of parking forever (mirrors the functional
+    layer's capacity check)."""
+    cfg = _bounded_cfg(depth=0, bufs=2, buf_size=4_096)
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, eager_threshold=65_536)
+    r = flood(cfg, msg_size=12_000, nthreads=4, nmsgs=100, max_seconds=2.0)
+    assert r.messages == 100
+
+
+def test_des_agg_batches_greedy_packing():
+    """Threshold-aware DES aggregation packs FIFO up to eager_threshold;
+    an op alone over budget gets its own batch."""
+    from repro.amtsim.parcelport_sim import ParcelOp, SimWorld, sim_config_for_variant
+
+    world = SimWorld(2, 1, sim_config_for_variant("lci_agg_eager"))  # 16 KiB budget
+    ops = [ParcelOp(src=0, dst=1, size=s) for s in (6_000, 6_000, 6_000, 20_000, 100)]
+    batches = world._agg_batches(ops)
+    assert [[op.size for op in b] for b in batches] == [[6_000, 6_000], [6_000], [20_000], [100]]
+
+
+def test_des_agg_eager_flood_delivers():
+    r = flood("lci_agg_eager", msg_size=600, nthreads=8, nmsgs=400)
+    assert r.messages == 400
+    assert r.backpressure_events == 0
+
+
+def test_des_store_tracks_high_water():
+    from repro.amtsim.des import Env, Store
+
+    env = Env()
+    store = Store(env)
+    for i in range(5):
+        store.put(i)
+    store.get_nowait()
+    store.put(99)
+    assert store.max_depth == 5
+
+
 def test_dedicated_progress_cores_not_justified():
     """Paper §3.3.4: 'we have not found sufficient evidence to justify'
     dedicated progress cores.  Reproduced: with a lock-free runtime they

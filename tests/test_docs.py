@@ -1,0 +1,39 @@
+"""Docs stay truthful: intra-repo links resolve, README's quoted commands
+parse, and the documented variant matrix covers every code variant.  The
+same checks run standalone in CI's docs job (``python tools/check_docs.py``)."""
+import importlib.util
+import shutil
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+_spec = importlib.util.spec_from_file_location("check_docs", REPO / "tools" / "check_docs.py")
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+
+def test_intra_repo_links_resolve():
+    failures: list = []
+    check_docs.check_links(failures)
+    assert not failures, failures
+
+
+@pytest.mark.skipif(shutil.which("bash") is None, reason="bash not available")
+def test_readme_commands_parse():
+    failures: list = []
+    check_docs.check_readme_commands(failures)
+    assert not failures, failures
+
+
+def test_variant_table_covers_all_variants():
+    failures: list = []
+    check_docs.check_variant_table(failures)
+    assert not failures, failures
+
+
+def test_variant_table_mentions_new_variant():
+    # the table must document the threshold-aware aggregation variant
+    text = (REPO / "docs" / "VARIANTS.md").read_text()
+    assert "lci_agg_eager" in text
