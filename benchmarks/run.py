@@ -135,13 +135,12 @@ def smoke() -> int:
         import dataclasses
 
         from repro.amtsim.parcelport_sim import sim_config_for_variant
+        from repro.core.comm.resources import ResourceLimits
 
         bounded_cfg = dataclasses.replace(
             sim_config_for_variant("lci"),
             name="lci_bounded",
-            send_queue_depth=2,
-            bounce_buffers=2,
-            bounce_buffer_size=16_384,
+            limits=ResourceLimits(send_queue_depth=2, bounce_buffers=2, bounce_buffer_size=16_384),
         )
         res = flood(bounded_cfg, msg_size=64, nthreads=4, nmsgs=200, max_seconds=2.0)
         results["des_bounded"] = {

@@ -104,6 +104,12 @@ class Mechanisms:
 
     # upper layer
     t_serialize_per_byte: float = 1.0 / 12e9  # memcpy-bound
+    # eager shipment beyond the header-piggyback limit copies the payload
+    # into a pre-registered bounce buffer (§3.3.4) — a distinct, separately
+    # calibrated memcpy from serialization, so experiments can vary
+    # registered-memory bandwidth without touching the serializer (the two
+    # coincide on the calibrated platforms, hence the equal default)
+    t_bounce_copy_per_byte: float = 1.0 / 12e9
     t_handle_parcel: float = 0.5 * US  # spawn the task, bookkeeping
     t_aggregate: float = 0.3 * US  # parcel queue lock + merge per parcel
 

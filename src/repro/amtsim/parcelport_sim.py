@@ -23,9 +23,11 @@ header, allocates buffers, posts the receive, and only then does the wire
 carry the payload — the same extra round both real parcelports pay for
 unexpected large transfers, applied to both families equally.
 
-**Bounded injection** (paper §3.3.4) mirrors the functional fabric
-(:mod:`repro.core.fabric`): each device may have a finite send ring
-(``SimConfig.send_queue_depth``) and a finite pool of registered bounce
+**Bounded injection** (paper §3.3.4) consumes the *same*
+:class:`repro.core.comm.resources.ResourceLimits` object as the functional
+fabric — ``SimConfig.limits`` — so the DES and the functional experiments
+can never drift field by field: each device may have a finite send ring
+(``limits.send_queue_depth``) and a finite pool of registered bounce
 buffers for eager messages (``bounce_buffers`` × ``bounce_buffer_size``).
 A post that finds the ring full or the pool empty is refused EAGAIN-style
 (cost ``t_post_eagain``), counted in ``SimWorld.backpressure_events``, and
@@ -34,10 +36,16 @@ parked in a per-device retry queue that background work drains under a
 small-message robustness.  A ring slot stays occupied from post until the
 *send completion is reaped* by the progress engine, so a rank that stops
 polling its own CQ throttles its own injection, exactly like real hardware.
-Occupancy high-water marks (send ring, bounce pool, retry queue) are
-reported by :meth:`SimWorld.injection_stats`.  Both limits default to 0
-(unbounded): the classic model is unchanged unless a config opts in, and
-send completions are only materialized as CQ traffic in bounded mode.
+With ``limits.recv_slots`` set, the *receive* side is bounded the same way
+:mod:`repro.core.fabric` bounds it: an arrival that finds every posted
+receive descriptor still un-reaped is an **RNR** (receiver-not-ready)
+event — counted in ``SimWorld.rnr_events``, parked on the destination
+device, and redelivered once the receiver's progress engine reaps backlog
+(hardware retransmission, not message loss).  Occupancy high-water marks
+(send ring, bounce pool, retry queue) and the RNR count are reported by
+:meth:`SimWorld.injection_stats`.  All limits default to 0 (unbounded):
+the classic model is bit-identical unless a config opts in, and send
+completions are only materialized as CQ traffic in bounded mode.
 
 **Modeled:** thread overlap/contention, per-mechanism software costs, wire
 serialization, protocol round trips, aggregation (optionally packed up to
@@ -53,9 +61,10 @@ configuration space as the paper's Figs 3-9.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, Generator, List, Optional, Tuple
 
+from ..core.comm.resources import ResourceLimits
 from ..core.device import LockMode
 from ..core.lci_parcelport import LCIPPConfig
 from ..core.variants import VARIANTS
@@ -93,20 +102,37 @@ class SimConfig:
     # aggregation drain packs parcels into batches of at most
     # eager_threshold bytes, so each aggregate still ships eager.
     agg_eager: bool = False
-    # Bounded injection (mirrors the functional fabric's knobs, §3.3.4):
-    # finite per-device send ring (0 = unbounded, the classic model) and a
-    # finite per-device pool of pre-registered bounce buffers for eager
-    # messages (0 = no pool).  A refused post costs t_post_eagain and parks
-    # in a per-device retry queue drained by background work.
-    send_queue_depth: int = 0
-    bounce_buffers: int = 0
-    bounce_buffer_size: int = 64 * 1024
-    # Parked posts retried per background_work call (sender-side throttle).
-    retry_budget: int = 8
+    # Bounded injection/receive (§3.3.4): the SAME ResourceLimits object
+    # the functional fabric consumes — never per-field mirrors (gated by
+    # tools/check_api.py).  A refused post costs t_post_eagain and parks in
+    # a per-device retry queue drained by background work; with recv_slots
+    # set, over-backlogged arrivals are RNR events redelivered on reap.
+    limits: ResourceLimits = field(default_factory=ResourceLimits)
+
+    # read-only delegates into the shared resource model ---------------------
+    @property
+    def send_queue_depth(self) -> int:
+        return self.limits.send_queue_depth
+
+    @property
+    def bounce_buffers(self) -> int:
+        return self.limits.bounce_buffers
+
+    @property
+    def bounce_buffer_size(self) -> int:
+        return self.limits.bounce_buffer_size
+
+    @property
+    def retry_budget(self) -> int:
+        return self.limits.retry_budget
+
+    @property
+    def recv_slots(self) -> int:
+        return self.limits.recv_slots
 
     @property
     def bounded_injection(self) -> bool:
-        return self.send_queue_depth > 0 or self.bounce_buffers > 0
+        return self.limits.bounded
 
 
 def sim_config_for_variant(name: str) -> SimConfig:
@@ -128,6 +154,9 @@ def sim_config_for_variant(name: str) -> SimConfig:
         progress_mode=cfg.progress_mode,
         eager_threshold=cfg.eager_threshold,
         agg_eager=cfg.agg_eager,
+        # the SAME resource object the functional fabric would be built
+        # with — the lci_b{depth} family bounds both layers identically
+        limits=cfg.limits,
     )
 
 
@@ -195,7 +224,12 @@ class _SimDevice:
     :class:`~repro.core.fabric.NetDevice`: a finite send ring (``inflight``
     slots, freed when the send completion is reaped from this device's CQ)
     and a finite bounce-buffer pool for eager messages.  Refused posts park
-    in ``parked`` until background work retries them."""
+    in ``parked`` until background work retries them.  With
+    ``limits.recv_slots`` set the receive side is bounded too: an arrival
+    beyond the posted-receive depth is RNR'd into ``rnr_parked`` and
+    redelivered once progress reaps backlog (the fabric's
+    ``_pending_sends`` + ``hw_progress`` retransmission, as one queue on
+    the receiver)."""
 
     __slots__ = (
         "env",
@@ -212,6 +246,9 @@ class _SimDevice:
         "parked",
         "parked_hw",
         "stats_backpressure",
+        "recv_backlog",
+        "rnr_parked",
+        "stats_rnr",
     )
 
     def __init__(self, env: Env, rank: "SimRank", index: int):
@@ -230,6 +267,11 @@ class _SimDevice:
         self.parked: Deque[_Message] = deque()  # EAGAIN'd posts awaiting retry
         self.parked_hw = 0  # retry-queue depth high-water mark
         self.stats_backpressure = 0
+        # bounded-receive (RNR) state: arrivals occupying posted receives
+        # until reaped, and arrivals refused for want of one
+        self.recv_backlog = 0
+        self.rnr_parked: Deque[Tuple[str, _Message]] = deque()
+        self.stats_rnr = 0
 
 
 class SimRank:
@@ -332,6 +374,7 @@ class SimWorld:
         self.msg_count = 0
         self.byte_count = 0
         self.backpressure_events = 0  # EAGAIN-style post refusals (§3.3.4)
+        self.rnr_events = 0  # receiver-not-ready arrival refusals
         for r in self.ranks:
             for w in range(workers_per_rank):
                 wk = SimWorker(r, w)
@@ -350,11 +393,13 @@ class SimWorld:
 
     # --------------------------------------------------------------- helpers
     def injection_stats(self) -> Dict[str, int]:
-        """Aggregate bounded-injection counters across every device:
-        refusal count plus occupancy high-water marks for the send ring,
-        the bounce pool, and the parked-post retry queue."""
+        """Aggregate bounded-injection/receive counters across every
+        device: EAGAIN refusal and RNR counts plus occupancy high-water
+        marks for the send ring, the bounce pool, and the parked-post
+        retry queue."""
         stats = {
             "backpressure_events": self.backpressure_events,
+            "rnr_events": self.rnr_events,
             "send_queue_hw": 0,
             "bounce_in_use_hw": 0,
             "retry_queue_hw": 0,
@@ -479,7 +524,17 @@ class SimWorld:
         else:
             piggy = op.size
             if op.size > PIGGYBACK_LIMIT:
-                yield Timeout(mech.t_serialize_per_byte * op.size)
+                # eager beyond the plain piggyback limit: the payload (a
+                # single parcel's, or a whole eager aggregate's) is copied
+                # into a pre-registered bounce buffer — charged on the
+                # dedicated calibrated mechanism.  This charge has always
+                # modeled the COPY, never send-side serialization (plain
+                # parcels charge no serializer on the send path in this
+                # model — deserialization is charged at delivery; aggregates
+                # pay t_serialize_per_byte at merge time, in
+                # _send_aggregate) — it just used to borrow the
+                # serializer's constant.
+                yield Timeout(mech.t_bounce_copy_per_byte * op.size)
         # an eager message (whole parcel in one shot, no follow-ups) draws a
         # registered bounce buffer while in flight
         eager = cfg.eager_threshold > 0 and piggy == op.size and not op.followup_chunks
@@ -590,7 +645,40 @@ class SimWorld:
 
     def _arrive_later(self, dst_dev: _SimDevice, msg: _Message, delay: float) -> Generator:
         yield Timeout(delay)
-        dst_dev.cq.append((msg.kind, msg))
+        self._admit_arrival(dst_dev, msg.kind, msg)
+
+    # -- bounded receive: RNR (§3.1, mirrors core.fabric) -------------------
+    def _admit_arrival(self, dst_dev: _SimDevice, kind: str, msg: _Message) -> None:
+        """Land an arrival in the destination device's hardware CQ.  With
+        ``limits.recv_slots`` set, each un-reaped arrival occupies one
+        posted receive descriptor; an arrival that finds none free is a
+        **receiver-not-ready** event, counted and parked for redelivery
+        once the receiver's progress engine reaps backlog — the DES
+        counterpart of ``NetDevice._try_deliver`` refusing into
+        ``_pending_sends`` and ``hw_progress`` retrying."""
+        rs = self.cfg.recv_slots
+        if rs > 0 and dst_dev.recv_backlog >= rs:
+            dst_dev.stats_rnr += 1
+            self.rnr_events += 1
+            dst_dev.rnr_parked.append((kind, msg))
+            return
+        if rs > 0:
+            dst_dev.recv_backlog += 1
+        dst_dev.cq.append((kind, msg))
+
+    def _reap_arrival(self, dev: _SimDevice, kind: str) -> None:
+        """Bookkeeping when a CQ entry is reaped: a consumed arrival frees
+        its receive descriptor (send_done entries never held one), letting
+        RNR-parked arrivals redeliver in order."""
+        rs = self.cfg.recv_slots
+        if rs <= 0:
+            return
+        if kind != "send_done":
+            dev.recv_backlog -= 1
+        while dev.rnr_parked and dev.recv_backlog < rs:
+            pkind, pmsg = dev.rnr_parked.popleft()
+            dev.recv_backlog += 1
+            dev.cq.append((pkind, pmsg))
 
     def _send_done_later(self, dev: _SimDevice, msg: _Message, delay: float) -> Generator:
         yield Timeout(delay)
@@ -641,6 +729,7 @@ class SimWorld:
             if not dev.cq:
                 break
             kind, msg = dev.cq.pop(0)
+            self._reap_arrival(dev, kind)
             moved = True
             yield Timeout(mech.t_per_completion)
             yield from self._handle_completion(worker, dev, kind, msg)
@@ -784,6 +873,7 @@ class SimWorld:
         # implicit progress: drain hardware arrivals into MPI-internal state
         while dev.cq:
             kind, msg = dev.cq.pop(0)
+            self._reap_arrival(dev, kind)
             yield Timeout(mech.t_per_completion)
             if kind == "send_done":
                 self._release_slot(dev, msg)

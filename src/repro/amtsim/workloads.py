@@ -30,10 +30,13 @@ class MicroResult:
     nthreads: int
     elapsed: float
     messages: int
-    # bounded-injection counters (zero under the classic unbounded model):
-    # EAGAIN refusals plus the send-ring / retry-queue occupancy high waters
+    # bounded-injection/receive counters (zero under the classic unbounded
+    # model): EAGAIN refusals, RNR arrival refusals, plus the send-ring /
+    # bounce-pool / retry-queue occupancy high waters
     backpressure_events: int = 0
+    rnr_events: int = 0
     send_queue_hw: int = 0
+    bounce_in_use_hw: int = 0
     retry_queue_hw: int = 0
 
     @property
@@ -50,7 +53,12 @@ class AppResult:
     tasks: int
     messages: int
     bytes: int
+    # bounded-injection/receive counters (zero under the unbounded model)
     backpressure_events: int = 0
+    rnr_events: int = 0
+    send_queue_hw: int = 0
+    bounce_in_use_hw: int = 0
+    retry_queue_hw: int = 0
 
 
 def _world(variant: str, n_ranks: int, workers: int, platform: Platform, mech: Mechanisms) -> SimWorld:
@@ -98,7 +106,9 @@ def flood(
         elapsed=max(elapsed, 1e-12),
         messages=state["delivered"],
         backpressure_events=inj["backpressure_events"],
+        rnr_events=inj["rnr_events"],
         send_queue_hw=inj["send_queue_hw"],
+        bounce_in_use_hw=inj["bounce_in_use_hw"],
         retry_queue_hw=inj["retry_queue_hw"],
     )
 
@@ -158,7 +168,9 @@ def chains(
         elapsed=world.env.now / hops * nchains,  # per-hop latency per chain
         messages=hops,
         backpressure_events=inj["backpressure_events"],
+        rnr_events=inj["rnr_events"],
         send_queue_hw=inj["send_queue_hw"],
+        bounce_in_use_hw=inj["bounce_in_use_hw"],
         retry_queue_hw=inj["retry_queue_hw"],
     )
 
@@ -253,6 +265,7 @@ def octotiger(
     for g in range(n_sub):
         run_subgrid(g, 0)
     world.run(until=max_seconds)
+    inj = world.injection_stats()
     return AppResult(
         variant=variant if isinstance(variant, str) else variant.name,
         n_nodes=n_nodes,
@@ -260,7 +273,11 @@ def octotiger(
         tasks=done_tasks["n"],
         messages=world.msg_count,
         bytes=world.byte_count,
-        backpressure_events=world.backpressure_events,
+        backpressure_events=inj["backpressure_events"],
+        rnr_events=inj["rnr_events"],
+        send_queue_hw=inj["send_queue_hw"],
+        bounce_in_use_hw=inj["bounce_in_use_hw"],
+        retry_queue_hw=inj["retry_queue_hw"],
     )
 
 

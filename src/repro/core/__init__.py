@@ -10,7 +10,20 @@ Layers (bottom-up, mirroring paper Fig 2):
   :mod:`repro.core.lci_parcelport`, :mod:`repro.core.variants` — the HPX
   adaptation layer and the paper's studied configurations.
 * :mod:`repro.core.executor` — the AMT worker runtime (HPX threads).
+* :mod:`repro.core.comm` — the first-class communication-interface layer:
+  the unified :class:`CommInterface` contract, :class:`PostStatus`
+  backpressure, :class:`Capabilities`, the shared :class:`ResourceLimits`
+  resource model, and the composable variant registry.
 """
+from .comm import (
+    Capabilities,
+    CommInterface,
+    CompletionTarget,
+    ParcelportBase,
+    PostStatus,
+    ResourceLimits,
+    UnsupportedCapabilityError,
+)
 from .completion import (
     LCRQueue,
     LockQueue,
@@ -26,11 +39,20 @@ from .lci_parcelport import LCIParcelport, LCIPPConfig
 from .mpi_parcelport import MPIParcelport
 from .parcel import Chunk, Parcel, deserialize_action, serialize_action
 from .parcelport import Locality, Parcelport, World
-from .variants import VARIANTS, make_parcelport_factory, max_devices, variant_names
+from .variants import (
+    VARIANTS,
+    make_parcelport_factory,
+    max_devices,
+    variant_limits,
+    variant_names,
+)
 
 __all__ = [
     "AMTExecutor",
+    "Capabilities",
     "Chunk",
+    "CommInterface",
+    "CompletionTarget",
     "Fabric",
     "LCIDevice",
     "LCIParcelport",
@@ -44,9 +66,13 @@ __all__ = [
     "NetDevice",
     "Parcel",
     "Parcelport",
+    "ParcelportBase",
+    "PostStatus",
+    "ResourceLimits",
     "Synchronizer",
     "SynchronizerPool",
     "TaskFuture",
+    "UnsupportedCapabilityError",
     "VARIANTS",
     "World",
     "deserialize_action",
@@ -54,5 +80,6 @@ __all__ = [
     "make_parcelport_factory",
     "max_devices",
     "serialize_action",
+    "variant_limits",
     "variant_names",
 ]

@@ -1,0 +1,65 @@
+"""repro.core.comm — the first-class communication-interface layer.
+
+The paper's conceptual contribution, made explicit (§2.3, §3.3; companion
+proposal arXiv 2503.15400):
+
+* :mod:`.interface` — the unified :class:`CommInterface` contract
+  (``post_send / post_recv / post_put_signal / progress / poll``),
+  :class:`PostStatus` backpressure results, :class:`Capabilities`
+  descriptors, and the :class:`CompletionTarget` completion surface.
+* :mod:`.resources` — :class:`ResourceLimits`, the single shared model of
+  finite communication resources consumed by the fabric, the parcelports,
+  AND the DES simulator.
+* :mod:`.base` — :class:`ParcelportBase`: aggregation + backpressure
+  retry/throttle machinery shared by every parcelport.
+* :mod:`.registry` — the composable variant registry (fixed names +
+  parameterized families such as ``lci_b{depth}``); imported lazily to
+  keep this package a leaf for the modules below it.
+"""
+from .base import (
+    ParcelportBase,
+    aggregate_parcels,
+    aggregate_projected_bytes,
+    is_aggregate,
+    split_aggregate,
+)
+from .interface import (
+    Capabilities,
+    CommInterface,
+    CompletionTarget,
+    PostStatus,
+    UnsupportedCapabilityError,
+    complete,
+)
+from .resources import ResourceLimits
+
+__all__ = [
+    "Capabilities",
+    "CommInterface",
+    "CompletionTarget",
+    "ParcelportBase",
+    "PostStatus",
+    "ResourceLimits",
+    "UnsupportedCapabilityError",
+    "VariantRegistry",
+    "VariantSpec",
+    "RegistryView",
+    "UnknownVariantError",
+    "aggregate_parcels",
+    "aggregate_projected_bytes",
+    "complete",
+    "is_aggregate",
+    "split_aggregate",
+]
+
+_REGISTRY_NAMES = {"VariantRegistry", "VariantSpec", "RegistryView", "UnknownVariantError"}
+
+
+def __getattr__(name: str):
+    # Lazy: registry is pure machinery, but importing it eagerly would make
+    # every `from .comm.base import ...` in lower layers pay for it.
+    if name in _REGISTRY_NAMES:
+        from . import registry
+
+        return getattr(registry, name)
+    raise AttributeError(name)

@@ -20,6 +20,14 @@ operations back to its client:
 All queues implement ``push(item)`` / ``pop() -> item | None`` (non-blocking)
 and report ``cost_model_name`` so the amtsim layer can attach calibrated
 costs to the same structures.
+
+Every class here also conforms to the unified
+:class:`repro.core.comm.interface.CompletionTarget` surface —
+``signal(item)`` / ``reap() -> item | None`` — so a communication backend
+hands completions to *any* of them through one call, and the parcelports
+collect them the same way regardless of which mechanism a variant selects
+(queue vs synchronizer vs pool is a calibrated-cost question, not an
+interface question).
 """
 from __future__ import annotations
 
@@ -60,6 +68,16 @@ class CompletionQueue:
                 break
             out.append(item)
         return out
+
+    # -- unified CompletionTarget surface (repro.core.comm.interface) -------
+    def signal(self, item: Any) -> None:
+        """Producer side of :class:`~repro.core.comm.interface.
+        CompletionTarget`: for a queue, signalling is enqueuing."""
+        self.push(item)
+
+    def reap(self) -> Optional[Any]:
+        """Consumer side: one completed item, or ``None``."""
+        return self.pop()
 
     def __len__(self) -> int:  # pragma: no cover - interface
         raise NotImplementedError
@@ -268,6 +286,11 @@ class Synchronizer:
             return item
         return None
 
+    def reap(self) -> Optional[Any]:
+        """Unified CompletionTarget surface: reaping a synchronizer is one
+        nonblocking test."""
+        return self.test()
+
     @property
     def ready(self) -> bool:
         return self._signaled
@@ -306,6 +329,12 @@ class SynchronizerPool:
             return (payload, item)
         finally:
             self._lock.release()
+
+    def reap(self) -> Optional[Tuple[Any, Any]]:
+        """Unified CompletionTarget surface: one round-robin poll.  (The
+        pool is a *poller over* synchronizers, so it has no ``signal`` —
+        producers signal the member synchronizer directly.)"""
+        return self.poll_one()
 
     def __len__(self) -> int:
         return len(self._pool)

@@ -17,8 +17,14 @@ communication library adds on top of verbs:
   ``try``    — one coarse try-lock; progress gives up if contended,
   ``block``  — one coarse blocking lock around every library call.
 
-Completion objects are anything with ``push(item)`` (completion queues) or
-``signal(item)`` (synchronizers) — see :mod:`repro.core.completion`.
+:class:`LCIDevice` is a full :class:`repro.core.comm.interface.
+CommInterface` backend: the five-verb surface (``post_send`` /
+``post_recv`` / ``post_put_signal`` / ``progress`` / ``poll``), typed
+:class:`PostStatus` backpressure results passed through from the fabric,
+and a :class:`Capabilities` descriptor the parcelport consults to select
+protocol paths.  Completion objects are anything conforming to
+:class:`~repro.core.comm.interface.CompletionTarget` — see
+:mod:`repro.core.completion`.
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
+from .comm.interface import Capabilities, PostStatus, complete as _complete_target
 from .fabric import Fabric, NetDevice
 
 __all__ = ["LCIDevice", "LockMode", "CompletionRecord", "WIRE_OVERHEAD"]
@@ -69,12 +76,9 @@ class _PostedRecv:
 
 
 def _complete(comp: Any, record: CompletionRecord) -> None:
-    """Dispatch to queue-based or synchronizer-based completion objects."""
-    push = getattr(comp, "push", None)
-    if push is not None:
-        push(record)
-    else:
-        comp.signal(record)
+    """Dispatch through the unified CompletionTarget ``signal`` surface
+    (queues, synchronizers, and legacy push-only objects alike)."""
+    _complete_target(comp, record)
 
 
 class LCIDevice:
@@ -101,6 +105,18 @@ class LCIDevice:
         self.lock_failures = 0
         self._prepost(self.PREPOST_DEPTH)
 
+    @property
+    def capabilities(self) -> Capabilities:
+        """What this backend can do — the parcelport's selection surface
+        (paper §2.3): dynamic put needs a registered target completion
+        object, and EAGAIN is only surfaced when the fabric is bounded."""
+        return Capabilities(
+            one_sided_put=self.put_target_comp is not None,
+            queue_completion=True,
+            explicit_progress=True,
+            bounded_injection=self.net.bounded,
+        )
+
     # ------------------------------------------------------------------ util
     def _prepost(self, n: int) -> None:
         for _ in range(n):
@@ -122,9 +138,10 @@ class LCIDevice:
             self._coarse.release()
 
     # ------------------------------------------------------------- two-sided
-    def post_send(self, dst_rank: int, dst_dev: int, tag: int, data: bytes, comp: Any, ctx: Any = None, eager: bool = False) -> bool:
+    def post_send(self, dst_rank: int, dst_dev: int, tag: int, data: bytes, comp: Any, ctx: Any = None, eager: bool = False) -> PostStatus:
         """Nonblocking tagged send; ``comp`` completes locally when sent.
-        Returns False (EAGAIN) when the fabric backpressures the post."""
+        Returns a falsy :class:`PostStatus` (EAGAIN) when the fabric
+        backpressures the post."""
         self._acquire()
         try:
             wire = struct.pack(_WIRE_FMT, tag) + data
@@ -162,16 +179,20 @@ class LCIDevice:
         _complete(pr.comp, CompletionRecord(op="recv", tag=tag, src_rank=src, data=data, ctx=pr.ctx))
 
     # -------------------------------------------------------------- one-sided
-    def put_dynamic(self, dst_rank: int, dst_dev: int, data: bytes, comp: Any, ctx: Any = None, eager: bool = False) -> bool:
+    def post_put_signal(self, dst_rank: int, dst_dev: int, data: bytes, comp: Any, ctx: Any = None, eager: bool = False) -> PostStatus:
         """One-sided put into the remote device's dynamic-put completion
         object.  No tag, no matching, no posted receive: the receiver learns
-        about the message by popping its completion queue (paper §3.3.1).
-        Returns False (EAGAIN) when the fabric backpressures the post."""
+        about the message by reaping its completion target (paper §3.3.1).
+        Returns a falsy :class:`PostStatus` (EAGAIN) when the fabric
+        backpressures the post."""
         self._acquire()
         try:
             return self.net.post_put(dst_rank, dst_dev, data, imm=0, ctx=("send", -1, comp, ctx), eager=eager)
         finally:
             self._release()
+
+    # historical LCI name for the same primitive
+    put_dynamic = post_put_signal
 
     def eager_capacity(self) -> Any:
         """Largest eager message this device can inject (None = unlimited)."""
@@ -212,6 +233,14 @@ class LCIDevice:
             return moved
         finally:
             self._release()
+
+    def poll(self, max_completions: int = 16) -> bool:
+        """Completion-test-driven progress — the implicit entry point of
+        the unified interface.  At this layer completion delivery and the
+        progress engine are fused (polling the hardware CQ *is* both), so
+        ``poll`` and :meth:`progress` share one implementation; the
+        parcelport's ``progress_mode`` decides which verb it calls when."""
+        return self.progress(max_completions)
 
     def _match_incoming(self, src: int, tag: int, payload: bytes) -> None:
         with self._match_lock:

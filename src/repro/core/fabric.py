@@ -21,7 +21,12 @@ Resource boundedness (paper §3.3.4): real NICs have a **finite send queue**
 or an exhausted pool fails EAGAIN-style — the library above must retry or
 throttle, which is exactly the resource-contention mitigation the paper
 credits for LCI's small-message robustness.  Both limits default to
-*unbounded* so that higher layers opt in explicitly.
+*unbounded* so that higher layers opt in explicitly.  The limits live in
+one shared :class:`~repro.core.comm.resources.ResourceLimits` object (the
+same model the DES consumes), and refusals are typed
+:class:`~repro.core.comm.interface.PostStatus` values — a full descriptor
+ring (``EAGAIN_QUEUE``) and an exhausted bounce pool (``EAGAIN_BUFFER``)
+are different resources.
 
 Each hardware resource is guarded by its *own* small mutex — "native network
 resources typically use distinct locks to ensure thread safety" (§3.3.3).
@@ -34,6 +39,9 @@ import threading
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
+
+from .comm.interface import PostStatus
+from .comm.resources import ResourceLimits
 
 __all__ = [
     "Fabric",
@@ -132,6 +140,7 @@ class NetDevice:
         self.dev_index = dev_index
         self.send_queue_depth = send_queue_depth
         self.bounce_pool = bounce_pool
+        self.bounded = send_queue_depth > 0 or bounce_pool is not None
         # Each resource has a distinct lock (hardware-level concurrency).
         self._recv_lock = threading.Lock()
         self._cq_lock = threading.Lock()
@@ -157,49 +166,51 @@ class NetDevice:
         """Largest message the eager path can carry here (None = unlimited)."""
         return None if self.bounce_pool is None else self.bounce_pool.buf_size
 
-    def _claim_slot(self, size: int, eager: bool) -> Tuple[bool, Any]:
+    def _claim_slot(self, size: int, eager: bool) -> Tuple[PostStatus, Any]:
         """Reserve a send-queue slot (+ bounce buffer for eager sends).
-        Returns (accepted, bounce_buffer)."""
+        Returns (status, bounce_buffer); a refusal names the exhausted
+        resource (queue vs buffer pool — different remedies)."""
         with self._send_lock:
             if self.send_queue_depth and self._inflight_sends >= self.send_queue_depth:
                 self.fabric.stats.backpressure_events += 1
-                return False, None
+                return PostStatus.EAGAIN_QUEUE, None
             bounce = None
             if eager and self.bounce_pool is not None:
                 bounce = self.bounce_pool.acquire(size)
                 if bounce is None:
                     self.fabric.stats.backpressure_events += 1
-                    return False, None
+                    return PostStatus.EAGAIN_BUFFER, None
             self._inflight_sends += 1
-        return True, bounce
+        return PostStatus.OK, bounce
 
-    def post_send(self, dst_rank: int, dst_dev: int, data: bytes, ctx: Any = None, eager: bool = False) -> bool:
+    def post_send(self, dst_rank: int, dst_dev: int, data: bytes, ctx: Any = None, eager: bool = False) -> PostStatus:
         """Post a two-sided send.  Completion appears in this device's CQ
         once the remote had a posted receive; otherwise the descriptor parks
         in the pending queue and is retried by :meth:`hw_progress` (the
         fabric's stand-in for hardware RNR retransmission).
 
-        Returns False (EAGAIN) if the send queue is full or — for eager
-        sends — no registered bounce buffer is available."""
-        ok, bounce = self._claim_slot(len(data), eager)
-        if not ok:
-            return False
+        Returns a falsy :class:`PostStatus` (EAGAIN) if the send queue is
+        full or — for eager sends — no registered bounce buffer is
+        available."""
+        status, bounce = self._claim_slot(len(data), eager)
+        if not status:
+            return status
         if bounce is not None:
             bounce[: len(data)] = data  # the copy into registered memory
         desc = _SendDesc(dst_rank, dst_dev, data, ctx, eager=eager, bounce=bounce)
         if not self._try_deliver(desc):
             with self._send_lock:
                 self._pending_sends.append(desc)
-        return True
+        return PostStatus.OK
 
-    def post_put(self, dst_rank: int, dst_dev: int, data: bytes, imm: int, ctx: Any = None, eager: bool = False) -> bool:
+    def post_put(self, dst_rank: int, dst_dev: int, data: bytes, imm: int, ctx: Any = None, eager: bool = False) -> PostStatus:
         """One-sided RDMA put with immediate: lands directly in the remote
         CQ, no posted receive consumed (LCI *dynamic put* maps here).
         Subject to the same send-queue/bounce-pool bounds as two-sided
-        sends; returns False on backpressure."""
-        ok, bounce = self._claim_slot(len(data), eager)
-        if not ok:
-            return False
+        sends; returns a falsy :class:`PostStatus` on backpressure."""
+        status, bounce = self._claim_slot(len(data), eager)
+        if not status:
+            return status
         if bounce is not None:
             bounce[: len(data)] = data
         target = self.fabric.device(dst_rank, dst_dev)
@@ -217,7 +228,7 @@ class NetDevice:
             st.eager_msgs += 1
         else:
             st.rendezvous_msgs += 1
-        return True
+        return PostStatus.OK
 
     def _try_deliver(self, desc: _SendDesc) -> bool:
         target = self.fabric.device(desc.dst_rank, desc.dst_dev)
@@ -296,9 +307,12 @@ class NetDevice:
 class Fabric:
     """The interconnect: a set of (rank, device) endpoints.
 
-    ``send_queue_depth`` / ``bounce_buffers`` / ``bounce_buffer_size`` set
-    the per-device injection bounds (0 buffers = no pool = eager sends need
-    no registered buffer; depth 0 = unbounded ring)."""
+    Per-device injection bounds come from one shared
+    :class:`~repro.core.comm.resources.ResourceLimits` — pass ``limits``
+    directly (the variant registry does, e.g. for the ``lci_b{depth}``
+    family), or use the legacy scalar kwargs, which assemble the same
+    object.  0 buffers = no pool = eager sends need no registered buffer;
+    depth 0 = unbounded ring."""
 
     def __init__(
         self,
@@ -308,31 +322,39 @@ class Fabric:
         send_queue_depth: int = 0,
         bounce_buffers: int = 0,
         bounce_buffer_size: int = 64 * 1024,
+        limits: Optional[ResourceLimits] = None,
     ):
         self.n_ranks = n_ranks
         self.devices_per_rank = devices_per_rank
         self.stats = FabricStats()
-        self._recv_slots = recv_slots
-        self._send_queue_depth = send_queue_depth
-        self._bounce_buffers = bounce_buffers
-        self._bounce_buffer_size = bounce_buffer_size
+        if limits is None:
+            limits = ResourceLimits(
+                send_queue_depth=send_queue_depth,
+                bounce_buffers=bounce_buffers,
+                bounce_buffer_size=bounce_buffer_size,
+                recv_slots=recv_slots,
+            )
+        elif recv_slots and not limits.recv_slots:
+            limits = limits.variant(recv_slots=recv_slots)
+        self.limits = limits
         self._devices: Dict[Tuple[int, int], NetDevice] = {}
         for r in range(n_ranks):
             for d in range(devices_per_rank):
                 self._devices[(r, d)] = self._make_device(r, d)
 
     def _make_device(self, rank: int, dev_index: int) -> NetDevice:
+        lim = self.limits
         pool = (
-            RegisteredBufferPool(self._bounce_buffers, self._bounce_buffer_size)
-            if self._bounce_buffers > 0
+            RegisteredBufferPool(lim.bounce_buffers, lim.bounce_buffer_size)
+            if lim.bounce_buffers > 0
             else None
         )
         return NetDevice(
             self,
             rank,
             dev_index,
-            recv_slots=self._recv_slots,
-            send_queue_depth=self._send_queue_depth,
+            recv_slots=lim.recv_slots,
+            send_queue_depth=lim.send_queue_depth,
             bounce_pool=pool,
         )
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .parcelport import World
-from .variants import make_parcelport_factory, max_devices
+from .variants import make_parcelport_factory, max_devices, variant_limits
 
 __all__ = ["deliver_payloads"]
 
@@ -25,6 +25,13 @@ def deliver_payloads(
 ) -> Tuple[World, List[tuple]]:
     """Send each payload round-robin between localities on ``variant``,
     drain (raises on deadlock / parked posts), return ``(world, got)``."""
+    if fabric_kwargs is None:
+        # A variant may carry its own resource model (e.g. the lci_b{depth}
+        # bounded-injection family): build the fabric from it so the limits
+        # actually bind.  Explicit fabric_kwargs always win.
+        limits = variant_limits(variant)
+        if limits.bounded or limits.recv_slots:
+            fabric_kwargs = {"limits": limits}
     world = World(
         n_loc,
         make_parcelport_factory(variant),

@@ -41,10 +41,10 @@ parcel is in flight, so op state machines are never touched concurrently.
 from __future__ import annotations
 
 import threading
-from collections import deque
 from dataclasses import dataclass, field, replace
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
+from .comm.resources import ResourceLimits
 from .completion import (
     CompletionQueue,
     Synchronizer,
@@ -88,13 +88,21 @@ class LCIPPConfig:
     # matches the piggyback limit, so plain small parcels behave as before
     # and small zero-copy chunks stop costing follow-up round trips.
     eager_threshold: int = HEADER_PIGGYBACK_LIMIT
-    # Sender-side throttle: backpressured posts retried per background_work.
-    retry_budget: int = 8
     # Threshold-aware aggregation: the drain packs parcels into aggregates
     # whose projected size stays within eager_threshold (fill one bounce
     # buffer, never spill an eager-sized batch into rendezvous).  Only
     # meaningful with aggregation=True and eager_threshold > 0.
     agg_eager: bool = False
+    # The shared resource model (paper §3.3.4): send-ring depth, bounce
+    # pool, retry throttle.  One object consumed by the fabric, this
+    # parcelport, AND the DES SimConfig — never mirrored field by field.
+    limits: ResourceLimits = field(default_factory=ResourceLimits)
+
+    @property
+    def retry_budget(self) -> int:
+        """Sender-side throttle: backpressured posts retried per
+        ``background_work`` (delegates to the shared resource model)."""
+        return self.limits.retry_budget
 
     def variant(self, **kw) -> "LCIPPConfig":
         return replace(self, **kw)
@@ -126,7 +134,12 @@ class LCIParcelport(Parcelport):
     def __init__(self, locality: Locality, fabric: Fabric, config: Optional[LCIPPConfig] = None):
         config = config or LCIPPConfig()
         agg_limit = config.eager_threshold if (config.agg_eager and config.eager_threshold > 0) else 0
-        super().__init__(locality, aggregation=config.aggregation, agg_limit_bytes=agg_limit)
+        super().__init__(
+            locality,
+            aggregation=config.aggregation,
+            agg_limit_bytes=agg_limit,
+            retry_budget=config.limits.retry_budget,
+        )
         self.cfg = config
         rank = locality.rank
         # The shared completion queue (across devices, to reduce load
@@ -138,16 +151,18 @@ class LCIParcelport(Parcelport):
             net = fabric.device(rank, d)
             dev = LCIDevice(net, lock_mode=config.lock_mode, put_target_comp=self.cq)
             self.devices.append(dev)
-        # Backpressured posts awaiting retry (sender-side throttle, §3.3.4).
-        self._retry_q: deque = deque()
-        self._retry_lock = threading.Lock()
+        # Protocol-path selection by CAPABILITY, not flag alone (§2.3): the
+        # one-sided header path needs a backend that advertises dynamic
+        # put; a backend without it falls back to the two-sided path the
+        # same config would otherwise describe.
+        caps = self.devices[0].capabilities
+        self._use_put = config.header_mode == "put" and caps.one_sided_put
         self.stats_eager_sent = 0
         self.stats_rendezvous_sent = 0
-        self.stats_backpressure_parks = 0
-        # Header receive plumbing for sendrecv mode.
+        # Header receive plumbing for the two-sided path.
         self._header_sync: Optional[Synchronizer] = None
         self._header_sync_lock = threading.Lock()
-        if config.header_mode == "sendrecv":
+        if not self._use_put:
             if config.header_comp == "sync":
                 self._header_sync = Synchronizer()
                 self.devices[0].post_recv(-1, TAG_HEADER, self._header_sync, ctx="header")
@@ -168,38 +183,9 @@ class LCIParcelport(Parcelport):
         self.sync_pool.add(sync, (kind, op))
         return sync
 
-    # -- injection backpressure (paper §3.3.4) ------------------------------
-    def _post_or_park(self, thunk: Callable[[], bool]) -> None:
-        """Run a fabric post; if it EAGAINs, park it for a later retry."""
-        if thunk():
-            return
-        self.stats_backpressure_parks += 1
-        with self._retry_lock:
-            self._retry_q.append(thunk)
-
-    def _drain_retries(self) -> bool:
-        """Retry up to ``retry_budget`` parked posts; stop at the first one
-        that still backpressures (the fabric has not freed resources, so the
-        rest would fail too — throttle instead of hammering)."""
-        moved = False
-        for _ in range(self.cfg.retry_budget):
-            with self._retry_lock:
-                if not self._retry_q:
-                    return moved
-                thunk = self._retry_q.popleft()
-            if thunk():
-                moved = True
-            else:
-                with self._retry_lock:
-                    self._retry_q.appendleft(thunk)
-                return moved
-        return moved
-
-    def retry_queue_depth(self) -> int:
-        return len(self._retry_q)
-
-    def pending_work(self) -> bool:
-        return bool(self._retry_q)
+    # Injection backpressure (paper §3.3.4): `_post_or_park` /
+    # `_drain_retries` / `pending_work` are inherited from ParcelportBase —
+    # the same parking + bounded-retry throttle every parcelport shares.
 
     # -- protocol selection (eager vs rendezvous) ---------------------------
     def _use_eager(self, parcel: Parcel, dev: LCIDevice) -> bool:
@@ -208,10 +194,10 @@ class LCIParcelport(Parcelport):
         cap = dev.eager_capacity()
         if cap is None:
             return True
-        # sendrecv mode prepends the library's tag word to the payload; the
-        # whole wire message must fit a bounce buffer or acquire() would
+        # the two-sided path prepends the library's tag word to the payload;
+        # the whole wire message must fit a bounce buffer or acquire() would
         # fail on every retry (silent parcel loss, not backpressure).
-        overhead = WIRE_OVERHEAD if self.cfg.header_mode == "sendrecv" else 0
+        overhead = 0 if self._use_put else WIRE_OVERHEAD
         return eager_wire_size(parcel) + overhead <= cap
 
     def _send_impl(self, dest: int, parcel: Parcel, cb: Optional[SendCallback]) -> None:
@@ -222,8 +208,8 @@ class LCIParcelport(Parcelport):
             wire = encode_eager(parcel, device_index=d)
             op = _SendOp(dest, parcel, cb, [(TAG_HEADER, wire)], d)
             comp = self._comp_for("send", op)
-            if self.cfg.header_mode == "put":
-                self._post_or_park(lambda: dev.put_dynamic(dest, d, wire, comp, ctx=("send", op), eager=True))
+            if self._use_put:
+                self._post_or_park(lambda: dev.post_put_signal(dest, d, wire, comp, ctx=("send", op), eager=True))
             else:
                 self._post_or_park(lambda: dev.post_send(dest, d, TAG_HEADER, wire, comp, ctx=("send", op), eager=True))
             self.stats_eager_sent += 1
@@ -238,8 +224,8 @@ class LCIParcelport(Parcelport):
             msgs.append((parcel.parcel_id, c.data))
         op = _SendOp(dest, parcel, cb, msgs, d)
         comp = self._comp_for("send", op)
-        if self.cfg.header_mode == "put":
-            self._post_or_park(lambda: dev.put_dynamic(dest, d, header, comp, ctx=("send", op)))
+        if self._use_put:
+            self._post_or_park(lambda: dev.post_put_signal(dest, d, header, comp, ctx=("send", op)))
         else:
             self._post_or_park(lambda: dev.post_send(dest, d, TAG_HEADER, header, comp, ctx=("send", op)))
         self.stats_rendezvous_sent += 1
@@ -270,6 +256,7 @@ class LCIParcelport(Parcelport):
                     nzc_chunk=Chunk(h.piggybacked_nzc),
                     zc_chunks=[Chunk(b) for b in h.inline_zc],
                     device_index=h.device_index,
+                    is_agg=h.is_agg,
                 )
             )
             return
@@ -308,6 +295,7 @@ class LCIParcelport(Parcelport):
             nzc_chunk=Chunk(bytes(op.nzc)),
             zc_chunks=[Chunk(bytes(b)) for b in op.zc_bufs],
             device_index=h.device_index,
+            is_agg=h.is_agg,
         )
         self.deliver(parcel)
 
@@ -340,7 +328,7 @@ class LCIParcelport(Parcelport):
         progressed |= self._drain_retries()
 
         polled_something = False
-        if cfg.followup_comp == "queue" or cfg.header_mode == "put":
+        if cfg.followup_comp == "queue" or self._use_put:
             for rec in self.cq.drain(8):
                 polled_something = True
                 progressed = True
@@ -370,7 +358,7 @@ class LCIParcelport(Parcelport):
                     self._header_sync_lock.release()
         if cfg.progress_mode == "implicit" and not polled_something:
             # the MPI behaviour: progress only as a side effect of a failed
-            # completion test
-            progressed |= my_dev.progress()
+            # completion test (the interface's `poll` verb)
+            progressed |= my_dev.poll()
             progressed |= self._drain_retries()
         return progressed

@@ -88,6 +88,16 @@ class MPIParcelport(Parcelport):
     def __init__(self, locality: Locality, fabric: Fabric, aggregation: bool = False):
         super().__init__(locality, aggregation=aggregation)
         self.mpi = MPISim(fabric, locality.rank)
+        # Capability-driven path selection (§2.3): the MPI backend
+        # advertises neither one-sided put nor shared completion queues nor
+        # explicit progress, which *forces* every structure the paper
+        # critiques — two-sided headers, per-request synchronizers tested
+        # round-robin in shared pools, and MPI_Test-only progress.  The
+        # checks make the dependency explicit: a backend that offered more
+        # would make this parcelport's structure a choice, not a necessity.
+        caps = self.mpi.capabilities
+        assert not caps.one_sided_put and not caps.queue_completion
+        assert not caps.explicit_progress
         self._send_pool = _RequestPool()
         self._recv_pool = _RequestPool()
         self._header_lock = threading.Lock()
@@ -181,11 +191,14 @@ class MPIParcelport(Parcelport):
             dest=h.dest,
             nzc_chunk=Chunk(bytes(op.nzc)),
             zc_chunks=[Chunk(bytes(b)) for b in op.zc_bufs],
+            is_agg=h.is_agg,
         )
         self.deliver(parcel)
 
     def pending_work(self) -> bool:
-        return self.mpi.pending_post_count() > 0
+        # MPI hides refused posts inside the library (no EAGAIN to us), so
+        # the library's internal backlog counts as pending work too.
+        return self.mpi.pending_post_count() > 0 or bool(self._retry_q)
 
     # -- the worker entry point ---------------------------------------------
     def background_work(self) -> bool:

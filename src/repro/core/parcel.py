@@ -52,6 +52,10 @@ _HEADER_FIXED = struct.calcsize(_HEADER_FMT)
 
 FLAG_PIGGYBACK = 0x01  # nzc chunk rides in this message
 FLAG_EAGER = 0x02  # zc chunks ride inline too: no follow-ups at all
+FLAG_AGGREGATE = 0x04  # the nzc chunk is an aggregate of parcels (§2.2.2);
+# carried out-of-band in the header so a plain parcel whose serialized
+# payload happens to start with the aggregate magic byte can never be
+# misparsed as one (the framing magic stays as an integrity check only)
 
 
 @dataclass
@@ -76,6 +80,9 @@ class Parcel:
     zc_chunks: List[Chunk] = field(default_factory=list)
     # Filled by the receiving parcelport before handing to the upper layer.
     device_index: int = 0
+    # True iff nzc_chunk holds an aggregate of parcels (set by
+    # aggregate_parcels, carried on the wire as FLAG_AGGREGATE).
+    is_agg: bool = False
 
     @property
     def num_zc(self) -> int:
@@ -98,6 +105,7 @@ class Header:
     nzc_size: int
     piggybacked_nzc: Optional[bytes]  # present iff nzc chunk rode along
     inline_zc: Optional[List[bytes]] = None  # eager messages: zc chunks inline
+    is_agg: bool = False  # FLAG_AGGREGATE: the payload is an aggregate
 
     @property
     def is_eager(self) -> bool:
@@ -124,7 +132,7 @@ def encode_header(parcel: Parcel, device_index: int) -> bytes:
         device_index,
         len(parcel.zc_chunks),
         parcel.nzc_chunk.size,
-        FLAG_PIGGYBACK if piggy else 0,
+        (FLAG_PIGGYBACK if piggy else 0) | (FLAG_AGGREGATE if parcel.is_agg else 0),
     )
     sizes = struct.pack(f"<{len(parcel.zc_chunks)}Q", *[c.size for c in parcel.zc_chunks])
     body = parcel.nzc_chunk.data if piggy else b""
@@ -143,7 +151,7 @@ def encode_eager(parcel: Parcel, device_index: int) -> bytes:
         device_index,
         len(parcel.zc_chunks),
         parcel.nzc_chunk.size,
-        FLAG_PIGGYBACK | FLAG_EAGER,
+        FLAG_PIGGYBACK | FLAG_EAGER | (FLAG_AGGREGATE if parcel.is_agg else 0),
     )
     sizes = struct.pack(f"<{len(parcel.zc_chunks)}Q", *[c.size for c in parcel.zc_chunks])
     parts = [head, sizes, parcel.nzc_chunk.data]
@@ -179,6 +187,7 @@ def decode_header(buf: bytes) -> Header:
         nzc_size=nzc_size,
         piggybacked_nzc=piggy_nzc,
         inline_zc=inline_zc,
+        is_agg=bool(flags & FLAG_AGGREGATE),
     )
 
 

@@ -10,38 +10,31 @@ and the upper layer provides::
     allocate_zc_chunks(nzc_chunk) -> buffers  # receiver-side zc allocation
     handle_parcel(parcel) -> None             # deliver to the runtime
 
-Also implements HPX **parcel aggregation** (paper §2.2.2): one parcel queue
-per destination; a send enqueues then drains-and-merges everything pending
-for that destination into a single aggregate parcel.
-
-Aggregation can be **threshold-aware** (``agg_limit_bytes``): instead of
-merging the whole queue into one arbitrarily large aggregate — which silently
-pushes a pile of eager-sized parcels over the protocol engine's
-``eager_threshold`` and onto the rendezvous path — the drain packs parcels
-greedily (FIFO order) into aggregates whose projected serialized size stays
-within the limit.  With the limit set to the eager threshold, every
-aggregate built from eager-sized parcels still ships as ONE eager message
-(it fills at most one bounce buffer); a single parcel already over the limit
-forms its own batch and takes the rendezvous path it would have taken
-anyway.  ``agg_limit_bytes=0`` keeps the classic unbounded merge.
+The library-agnostic machinery — parcel aggregation (paper §2.2.2,
+including the threshold-aware drain), backpressure retry parking, and the
+send/receive stats — lives in :class:`repro.core.comm.base.ParcelportBase`
+and is shared by every concrete parcelport; this module re-exports the
+aggregation helpers under their historical names.
 """
 from __future__ import annotations
 
 import itertools
-import struct
-import threading
-from collections import deque
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional
 
-from .fabric import Fabric
-from .parcel import (
-    Chunk,
-    Parcel,
-    SendCallback,
-    deserialize_action,
-    serialize_action,
-    zc_sizes_from_nzc,
+from .comm.base import (  # noqa: F401  (re-exported public API)
+    AGG_MAGIC,
+    AGG_MAX_PARCELS,
+    AGG_PER_PARCEL_BYTES,
+    AGG_PREAMBLE_BYTES,
+    AGG_SUB_SHIFT,
+    ParcelportBase,
+    aggregate_parcels,
+    aggregate_projected_bytes,
+    is_aggregate,
+    split_aggregate,
 )
+from .fabric import Fabric
+from .parcel import Parcel, SendCallback, deserialize_action, serialize_action, zc_sizes_from_nzc
 
 __all__ = [
     "Parcelport",
@@ -52,175 +45,13 @@ __all__ = [
     "split_aggregate",
 ]
 
-AGG_MAGIC = 0xA6
 
-# Parcel-id bit layout: bits 0..39 are the per-locality counter, bits 40..47
-# the source rank (Locality seeds its counter at ``rank << 40``), and bits
-# 48..63 are RESERVED for aggregate sub-ids: parcel ``i`` of a split
-# aggregate gets ``base_id | ((i + 1) << AGG_SUB_SHIFT)``.  Ordinary ids
-# never touch the reserved range, so sub-ids cannot collide with dense
-# neighbouring ids (the old ``base_id * 1000 + i`` scheme collided as soon
-# as ids were dense or an aggregate held >= 1000 parcels).
-AGG_SUB_SHIFT = 48
-AGG_MAX_PARCELS = (1 << 16) - 1
+class Parcelport(ParcelportBase):
+    """Abstract parcelport (one per communication library per locality).
 
-# Serialized-aggregate framing overhead: the <BI> preamble plus one <II>
-# record per member parcel (see aggregate_parcels).  aggregate_projected_bytes
-# must stay in lockstep with the actual encoder.
-AGG_PREAMBLE_BYTES = 5
-AGG_PER_PARCEL_BYTES = 8
-
-
-def aggregate_projected_bytes(parcels: Sequence[Parcel]) -> int:
-    """``total_bytes`` the aggregate of ``parcels`` will have, without
-    building it — the threshold-aware drain sizes batches with this."""
-    return AGG_PREAMBLE_BYTES + sum(AGG_PER_PARCEL_BYTES + p.total_bytes for p in parcels)
-
-
-def aggregate_parcels(parcels: Sequence[Parcel]) -> Parcel:
-    """Merge parcels sharing a destination into one (paper §2.2.2)."""
-    assert parcels, "cannot aggregate zero parcels"
-    assert len(parcels) <= AGG_MAX_PARCELS, "aggregate exceeds the sub-id bit range"
-    first = parcels[0]
-    parts = [struct.pack("<BI", AGG_MAGIC, len(parcels))]
-    zc: List[Chunk] = []
-    for p in parcels:
-        parts.append(struct.pack("<II", p.nzc_chunk.size, len(p.zc_chunks)))
-        parts.append(p.nzc_chunk.data)
-        zc.extend(p.zc_chunks)
-    return Parcel(
-        parcel_id=first.parcel_id,
-        source=first.source,
-        dest=first.dest,
-        nzc_chunk=Chunk(b"".join(parts)),
-        zc_chunks=zc,
-    )
-
-
-def is_aggregate(parcel: Parcel) -> bool:
-    return parcel.nzc_chunk.size >= 5 and parcel.nzc_chunk.data[0] == AGG_MAGIC
-
-
-def split_aggregate(parcel: Parcel) -> List[Parcel]:
-    buf = parcel.nzc_chunk.data
-    (_, n) = struct.unpack_from("<BI", buf, 0)
-    off = 5
-    zc_off = 0
-    out: List[Parcel] = []
-    for i in range(n):
-        nzc_size, n_zc = struct.unpack_from("<II", buf, off)
-        off += 8
-        nzc = buf[off : off + nzc_size]
-        off += nzc_size
-        chunks = parcel.zc_chunks[zc_off : zc_off + n_zc]
-        zc_off += n_zc
-        out.append(
-            Parcel(
-                parcel_id=parcel.parcel_id | ((i + 1) << AGG_SUB_SHIFT),
-                source=parcel.source,
-                dest=parcel.dest,
-                nzc_chunk=Chunk(bytes(nzc)),
-                zc_chunks=list(chunks),
-            )
-        )
-    return out
-
-
-class Parcelport:
-    """Abstract parcelport (one per communication library per locality)."""
-
-    def __init__(self, locality: "Locality", aggregation: bool = False, agg_limit_bytes: int = 0):
-        self.locality = locality
-        self.aggregation = aggregation
-        # Threshold-aware aggregation: max projected aggregate size per
-        # batch (0 = classic unbounded merge).
-        self.agg_limit_bytes = agg_limit_bytes
-        self._agg_queues: Dict[int, deque] = {}
-        self._agg_lock = threading.Lock()
-        self.stats_sent = 0
-        self.stats_received = 0
-        self.stats_agg_batches = 0  # threshold-aware drains that split
-
-    # -- public API (Listing 2) ---------------------------------------------
-    def send(self, dest: int, parcel: Parcel, cb: Optional[SendCallback] = None) -> None:
-        if not self.aggregation:
-            self._send_impl(dest, parcel, cb)
-            return
-        # Aggregation path: enqueue, then drain everything for this dest.
-        with self._agg_lock:
-            q = self._agg_queues.setdefault(dest, deque())
-            q.append((parcel, cb))
-            drained = list(q)
-            q.clear()
-        if not drained:
-            return
-        batches = self._agg_batches(drained)
-        if len(batches) > 1:
-            self.stats_agg_batches += len(batches)
-        for batch in batches:
-            self._send_batch(dest, batch)
-
-    def _agg_batches(self, drained: List[tuple]) -> List[List[tuple]]:
-        """Split the drained queue into aggregate batches.
-
-        Unbounded mode returns one batch (everything merges).  With
-        ``agg_limit_bytes`` set, parcels pack greedily in FIFO order until
-        the projected aggregate size (:func:`aggregate_projected_bytes`)
-        would exceed the limit — so an aggregate of eager-sized parcels
-        never spills past the eager threshold into rendezvous.  A parcel
-        that alone exceeds the limit gets its own batch (it is rendezvous
-        traffic regardless)."""
-        if self.agg_limit_bytes <= 0:
-            return [drained]
-        batches: List[List[tuple]] = []
-        cur: List[tuple] = []
-        cur_bytes = AGG_PREAMBLE_BYTES
-        for p, cb in drained:
-            need = AGG_PER_PARCEL_BYTES + p.total_bytes
-            if cur and cur_bytes + need > self.agg_limit_bytes:
-                batches.append(cur)
-                cur, cur_bytes = [], AGG_PREAMBLE_BYTES
-            cur.append((p, cb))
-            cur_bytes += need
-        if cur:
-            batches.append(cur)
-        return batches
-
-    def _send_batch(self, dest: int, batch: List[tuple]) -> None:
-        if len(batch) == 1:
-            self._send_impl(dest, batch[0][0], batch[0][1])
-            return
-        cbs = [c for (_p, c) in batch if c is not None]
-        agg = aggregate_parcels([p for (p, _c) in batch])
-
-        def agg_cb(_parcel: Parcel) -> None:
-            for c in cbs:
-                c(_parcel)
-
-        self._send_impl(dest, agg, agg_cb)
-
-    def background_work(self) -> bool:
-        raise NotImplementedError
-
-    def pending_work(self) -> bool:
-        """True while the parcelport still holds work no completion will
-        ever surface on its own (e.g. backpressured posts parked for
-        retry).  ``World.drain`` refuses to call a world quiescent while
-        any parcelport reports pending work."""
-        return False
-
-    # -- subclass hook --------------------------------------------------------
-    def _send_impl(self, dest: int, parcel: Parcel, cb: Optional[SendCallback]) -> None:
-        raise NotImplementedError
-
-    # -- receiver-side glue ---------------------------------------------------
-    def deliver(self, parcel: Parcel) -> None:
-        self.stats_received += 1
-        if is_aggregate(parcel):
-            for p in split_aggregate(parcel):
-                self.locality.handle_parcel(p)
-        else:
-            self.locality.handle_parcel(parcel)
+    Subclasses implement ``_send_impl`` (per-parcel protocol selection
+    against their :class:`~repro.core.comm.interface.CommInterface`
+    backend) and ``background_work`` (their progress/completion loop)."""
 
 
 class Locality:

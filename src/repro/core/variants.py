@@ -1,34 +1,69 @@
-"""Named parcelport variants — one per configuration in paper Figs 6-9."""
+"""Named parcelport variants — the paper's configurations (Figs 6-9) as a
+composable registry.
+
+Fixed names cover the factor-study matrix; **parameterized families**
+(:class:`~repro.core.comm.registry.VariantSpec`) cover every axis that
+sweeps a number, resolved on demand without pre-registration:
+
+* ``lci_d{n}`` / ``lci_try_d{n}`` — device replication (paper Fig 9);
+* ``lci_eager_{k}k`` — eager/rendezvous threshold at ``k`` KiB (§3.3/§4.2);
+* ``lci_b{depth}`` — **bounded injection** (§3.3.4): send ring and bounce
+  pool both ``depth`` deep, via the shared
+  :class:`~repro.core.comm.resources.ResourceLimits` — the same object the
+  fabric sizes its rings from and the DES simulates, so
+  ``make_parcelport_factory("lci_b8")`` and ``sim_config_for_variant
+  ("lci_b8")`` can never disagree about what "8" bounds.
+
+``VARIANTS`` remains a dict-compatible view for legacy call sites; every
+pre-existing name resolves to a config equal to its old hard-coded value
+(regression-tested in tests/test_comm_interface.py).
+"""
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable
 
+from .comm.registry import RegistryView, VariantRegistry, VariantSpec
+from .comm.resources import ResourceLimits
 from .device import LockMode
 from .fabric import Fabric
-from .lci_parcelport import LCIParcelport, LCIPPConfig
+from .lci_parcelport import LCIPPConfig, LCIParcelport
 from .mpi_parcelport import MPIParcelport
 from .parcelport import Locality, Parcelport
 
-__all__ = ["VARIANTS", "make_parcelport_factory", "variant_names", "max_devices"]
+__all__ = [
+    "REGISTRY",
+    "VARIANTS",
+    "make_parcelport_factory",
+    "variant_names",
+    "variant_limits",
+    "max_devices",
+]
 
-# The paper's evaluated configurations.
-VARIANTS: Dict[str, LCIPPConfig] = {
+REGISTRY = VariantRegistry()
+
+# Default bounce-buffer size for the bounded-injection family: matches the
+# fabric's default registered-buffer size, comfortably above the 16 KiB
+# eager threshold.
+_B_FAMILY_BUF_SIZE = 64 * 1024
+
+# -- fixed variants (the paper's evaluated configurations) -------------------
+_FIXED = {
     # §4: the full-fledged LCI parcelport ("base" in §5 factor studies).
-    "lci": LCIPPConfig(name="lci"),
-    "base": LCIPPConfig(name="base"),
+    "lci": lambda: LCIPPConfig(name="lci"),
+    "base": lambda: LCIPPConfig(name="base"),
     # §5.1 asynchrony: two-sided header transfer keeps the completion queue…
-    "sendrecv_queue": LCIPPConfig(name="sendrecv_queue", header_mode="sendrecv", header_comp="queue"),
+    "sendrecv_queue": lambda: LCIPPConfig(name="sendrecv_queue", header_mode="sendrecv", header_comp="queue"),
     # …or drops to a single synchronizer (one pre-posted receive at a time).
-    "sendrecv_sync": LCIPPConfig(name="sendrecv_sync", header_mode="sendrecv", header_comp="sync"),
+    "sendrecv_sync": lambda: LCIPPConfig(name="sendrecv_sync", header_mode="sendrecv", header_comp="sync"),
     # §5.2 concurrency: synchronizer pool instead of completion queue for
     # everything except header dynamic puts.
-    "sync": LCIPPConfig(name="sync", followup_comp="sync"),
-    "queue_lock": LCIPPConfig(name="queue_lock", cq_kind="lock"),
-    "queue_ms": LCIPPConfig(name="queue_ms", cq_kind="ms"),
+    "sync": lambda: LCIPPConfig(name="sync", followup_comp="sync"),
+    "queue_lock": lambda: LCIPPConfig(name="queue_lock", cq_kind="lock"),
+    "queue_ms": lambda: LCIPPConfig(name="queue_ms", cq_kind="ms"),
     # §5.3 multithreading/progress: MPI-mimicking ladder.  All use
     # send/recv + synchronizers (completion queues don't work under coarse
     # locks, per the paper).
-    "block": LCIPPConfig(
+    "block": lambda: LCIPPConfig(
         name="block",
         header_mode="sendrecv",
         header_comp="sync",
@@ -37,7 +72,7 @@ VARIANTS: Dict[str, LCIPPConfig] = {
         lock_mode=LockMode.BLOCK,
         progress_mode="implicit",
     ),
-    "try": LCIPPConfig(
+    "try": lambda: LCIPPConfig(
         name="try",
         header_mode="sendrecv",
         header_comp="sync",
@@ -46,7 +81,7 @@ VARIANTS: Dict[str, LCIPPConfig] = {
         lock_mode=LockMode.TRY,
         progress_mode="implicit",
     ),
-    "try_progress": LCIPPConfig(
+    "try_progress": lambda: LCIPPConfig(
         name="try_progress",
         header_mode="sendrecv",
         header_comp="sync",
@@ -56,7 +91,7 @@ VARIANTS: Dict[str, LCIPPConfig] = {
         progress_mode="explicit",
     ),
     # the catastrophic combination (§5.3): blocking lock + eager progress
-    "progress": LCIPPConfig(
+    "progress": lambda: LCIPPConfig(
         name="progress",
         header_mode="sendrecv",
         header_comp="sync",
@@ -65,7 +100,7 @@ VARIANTS: Dict[str, LCIPPConfig] = {
         lock_mode=LockMode.BLOCK,
         progress_mode="explicit",
     ),
-    "block_d2": LCIPPConfig(
+    "block_d2": lambda: LCIPPConfig(
         name="block_d2",
         header_mode="sendrecv",
         header_comp="sync",
@@ -74,33 +109,75 @@ VARIANTS: Dict[str, LCIPPConfig] = {
         lock_mode=LockMode.BLOCK,
         progress_mode="implicit",
     ),
+    # Protocol factor study (§3.3/§4.2): force every parcel down the
+    # rendezvous path / alias the calibrated 16 KiB eager default.
+    "lci_noeager": lambda: LCIPPConfig(name="lci_noeager", eager_threshold=0),
+    "lci_eager": lambda: LCIPPConfig(name="lci_eager", eager_threshold=16 * 1024),
+    # Threshold-aware aggregation (§2.2.2 x §3.3): merge same-destination
+    # parcels, but pack each aggregate only up to the eager threshold so it
+    # still ships as ONE eager message (fills one bounce buffer; never
+    # spills an eager-sized batch onto the rendezvous path).
+    "lci_agg_eager": lambda: LCIPPConfig(
+        name="lci_agg_eager", aggregation=True, agg_eager=True, eager_threshold=16 * 1024
+    ),
 }
+for _name, _build in _FIXED.items():
+    REGISTRY.register(_name, _build)
 
+# -- parameterized families --------------------------------------------------
 # device-scaling families (paper Fig 9)
-for _n in (1, 2, 4, 8, 16, 32):
-    VARIANTS[f"lci_d{_n}"] = LCIPPConfig(name=f"lci_d{_n}", ndevices=_n)
-    VARIANTS[f"lci_try_d{_n}"] = LCIPPConfig(name=f"lci_try_d{_n}", ndevices=_n, lock_mode=LockMode.TRY)
+REGISTRY.register_family(VariantSpec(
+    grammar="lci_d{n}",
+    build=lambda name, n: LCIPPConfig(name=name, ndevices=n),
+    canonical=((1,), (2,), (4,), (8,), (16,), (32,)),
+    doc="device-replication scaling (lock-free)",
+))
+REGISTRY.register_family(VariantSpec(
+    grammar="lci_try_d{n}",
+    build=lambda name, n: LCIPPConfig(name=name, ndevices=n, lock_mode=LockMode.TRY),
+    canonical=((1,), (2,), (4,), (8,), (16,), (32,)),
+    doc="device scaling under a coarse try lock",
+))
+# eager-threshold family (§3.3/§4.2: the one-message limit in KiB)
+REGISTRY.register_family(VariantSpec(
+    grammar="lci_eager_{k}k",
+    build=lambda name, k: LCIPPConfig(name=name, eager_threshold=k * 1024),
+    canonical=((16,), (64,)),
+    doc="eager protocol up to {k} KiB",
+))
+# bounded-injection family (§3.3.4, ROADMAP follow-up): finite send ring +
+# bounce pool, both `depth` deep, through the shared resource model.
+REGISTRY.register_family(VariantSpec(
+    grammar="lci_b{depth}",
+    build=lambda name, depth: LCIPPConfig(
+        name=name,
+        limits=ResourceLimits(
+            send_queue_depth=depth,
+            bounce_buffers=depth,
+            bounce_buffer_size=_B_FAMILY_BUF_SIZE,
+        ),
+    ),
+    canonical=((4,), (16,), (64,)),
+    doc="bounded injection: send ring + bounce pool {depth} deep",
+))
 
-# Protocol factor study (paper §3.3/§4.2: eager vs rendezvous selection).
-# ``lci_noeager`` forces every parcel down the rendezvous path (header +
-# follow-ups); the ``lci_eager*`` family raises the one-message limit so
-# small zero-copy chunks ship inline through bounce buffers.
-VARIANTS["lci_noeager"] = LCIPPConfig(name="lci_noeager", eager_threshold=0)
-for _kib in (16, 64):
-    VARIANTS[f"lci_eager_{_kib}k"] = LCIPPConfig(name=f"lci_eager_{_kib}k", eager_threshold=_kib * 1024)
-VARIANTS["lci_eager"] = VARIANTS["lci_eager_16k"].variant(name="lci_eager")
+#: dict-compatible view (legacy name); resolves family members on demand.
+VARIANTS = RegistryView(REGISTRY)
 
-# Threshold-aware aggregation (§2.2.2 x §3.3): merge same-destination
-# parcels, but pack each aggregate only up to the eager threshold so it
-# still ships as ONE eager message (fills one bounce buffer; never spills
-# an eager-sized batch onto the rendezvous path).
-VARIANTS["lci_agg_eager"] = LCIPPConfig(
-    name="lci_agg_eager", aggregation=True, agg_eager=True, eager_threshold=16 * 1024
-)
+_NO_LIMITS = ResourceLimits()
 
 
 def variant_names():
-    return ["mpi", "mpi_a"] + sorted(VARIANTS)
+    return ["mpi", "mpi_a"] + REGISTRY.names()
+
+
+def variant_limits(name: str) -> ResourceLimits:
+    """The shared resource model a variant calls for — what the fabric
+    backing a :class:`~repro.core.parcelport.World` should be built with.
+    Unbounded for the MPI family and every variant that does not opt in."""
+    if name in ("mpi", "mpi_a"):
+        return _NO_LIMITS
+    return VARIANTS[name].limits
 
 
 def max_devices(name: str) -> int:
@@ -110,7 +187,9 @@ def max_devices(name: str) -> int:
 
 
 def make_parcelport_factory(name: str) -> Callable[[Locality, Fabric], Parcelport]:
-    """Factory for :class:`repro.core.parcelport.World`."""
+    """Factory for :class:`repro.core.parcelport.World`.  Resolves fixed
+    names and parameterized family members (``lci_b8``, ``lci_d7``, …)
+    without pre-registration."""
     if name == "mpi":
         return lambda loc, fab: MPIParcelport(loc, fab, aggregation=False)
     if name == "mpi_a":

@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""API-drift gate (the CI docs job, also run as a tier-1 test).
+
+The redesign's core guarantee is ONE shared resource model:
+``repro.core.comm.resources.ResourceLimits`` is the single source of
+resource knobs, consumed by the functional fabric, the parcelports, and
+the DES ``SimConfig``.  Before it, ``SimConfig`` hand-mirrored the fabric
+knobs field by field — a drift machine.  This gate fails if the mirror
+ever re-grows:
+
+1. **No mirrored fields** — no dataclass *field* of ``SimConfig`` or
+   ``LCIPPConfig`` may share a name with a ``ResourceLimits`` field
+   (read-only delegating properties are fine; duplicated storage is not).
+2. **Shared object, not copies** — both configs carry a ``limits`` field
+   typed ``ResourceLimits``, ``Fabric`` exposes the one it was built
+   with, and ``sim_config_for_variant`` hands the DES the *same* limits
+   the functional variant resolves to (checked on ``lci_b8``, a
+   parameterized family member resolved on demand).
+3. **Delegates stay wired** — the legacy ``SimConfig.send_queue_depth``
+   etc. read through to ``limits``.
+
+Exit code is nonzero on any failure; failures are listed one per line.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def check_api(failures: list) -> None:
+    sys.path.insert(0, str(REPO / "src"))
+    try:
+        from repro.amtsim.parcelport_sim import SimConfig, sim_config_for_variant
+        from repro.core.comm.resources import ResourceLimits
+        from repro.core.fabric import Fabric
+        from repro.core.lci_parcelport import LCIPPConfig
+        from repro.core.variants import VARIANTS
+    except Exception as exc:  # pragma: no cover - environment-dependent
+        failures.append(f"import failed: {exc}")
+        return
+
+    limit_fields = {f.name for f in dataclasses.fields(ResourceLimits)}
+
+    # 1. no config may re-grow a field duplicating the shared model
+    for cfg_cls in (SimConfig, LCIPPConfig):
+        dup = limit_fields & {f.name for f in dataclasses.fields(cfg_cls)}
+        if dup:
+            failures.append(
+                f"{cfg_cls.__name__} duplicates ResourceLimits fields {sorted(dup)} "
+                "(use the shared `limits` object, not mirrored fields)"
+            )
+
+    # 2. every layer consumes the one shared object
+    for cfg_cls in (SimConfig, LCIPPConfig):
+        names = {f.name: f for f in dataclasses.fields(cfg_cls)}
+        if "limits" not in names:
+            failures.append(f"{cfg_cls.__name__} has no `limits: ResourceLimits` field")
+        elif not isinstance(cfg_cls().limits, ResourceLimits):
+            failures.append(f"{cfg_cls.__name__}().limits is not a ResourceLimits")
+    lim = ResourceLimits(send_queue_depth=3, bounce_buffers=2, bounce_buffer_size=4096)
+    fab = Fabric(2, limits=lim)
+    if getattr(fab, "limits", None) is not lim:
+        failures.append("Fabric does not expose the ResourceLimits it was built with")
+    if fab.device(0).send_queue_depth != 3:
+        failures.append("Fabric devices ignore limits.send_queue_depth")
+    try:
+        functional = VARIANTS["lci_b8"].limits
+        des = sim_config_for_variant("lci_b8").limits
+        if functional != des:
+            failures.append(
+                f"lci_b8: functional limits {functional} != DES limits {des} "
+                "(the two layers drifted)"
+            )
+    except KeyError:
+        failures.append("parameterized family member lci_b8 failed to resolve")
+
+    # 3. legacy knob names still read through to the shared model
+    probe = SimConfig(limits=ResourceLimits(send_queue_depth=7, bounce_buffers=5,
+                                            bounce_buffer_size=1234, retry_budget=9,
+                                            recv_slots=6))
+    for knob, want in (("send_queue_depth", 7), ("bounce_buffers", 5),
+                       ("bounce_buffer_size", 1234), ("retry_budget", 9),
+                       ("recv_slots", 6)):
+        if getattr(probe, knob, None) != want:
+            failures.append(f"SimConfig.{knob} does not delegate to limits.{knob}")
+    if LCIPPConfig(limits=ResourceLimits(retry_budget=3)).retry_budget != 3:
+        failures.append("LCIPPConfig.retry_budget does not delegate to limits.retry_budget")
+
+
+def main() -> int:
+    failures: list = []
+    check_api(failures)
+    for f in failures:
+        print(f"FAIL: {f}")
+    print(f"check_api: {len(failures)} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

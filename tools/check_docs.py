@@ -77,21 +77,39 @@ def check_variant_table(failures: list) -> None:
     except Exception as exc:  # pragma: no cover - environment-dependent
         print(f"note: skipping variant-table check (import failed: {exc})")
         return
+    from repro.core.variants import REGISTRY
+
     text = variants_md.read_text()
-    # Collect the backticked tokens the table documents, expanding
-    # lci_d{1,2,4,8,16,32}-style family rows into their members.  Bare
-    # substring matching would be vacuous ('sync' ⊂ 'sendrecv_sync', 'lci'
-    # ⊂ every lci_* row) — deleting a row must actually fail the check.
+    # Collect the backticked tokens the table documents.  Two kinds of
+    # family rows expand:
+    #   * enumerated  — lci_d{1,2,4,8,16,32} lists its members;
+    #   * grammar     — lci_b{depth} / lci_eager_{k}k: the token IS a
+    #     registered family's grammar string, and the row covers exactly
+    #     what that family's compiled regex resolves (lci_b4, lci_b8, ...).
+    #     The regex comes from the registry (VariantSpec.regex) — ONE
+    #     grammar shared between the resolver and this gate, never
+    #     re-implemented here.  A {placeholder} token matching no
+    #     registered family documents nothing.
+    # Bare substring matching would be vacuous ('sync' ⊂ 'sendrecv_sync',
+    # 'lci' ⊂ every lci_* row) — deleting a row must actually fail the
+    # check, so non-family tokens match exactly.
+    specs_by_grammar = {spec.grammar: spec for spec in REGISTRY.families()}
     documented = set()
+    family_patterns = []
     for token in re.findall(r"`([^`]+)`", text):
         m = re.fullmatch(r"([\w]+)\{([\d,]+)\}", token)
         if m:
             documented.update(m.group(1) + n for n in m.group(2).split(","))
+        elif token in specs_by_grammar:
+            family_patterns.append(specs_by_grammar[token].regex)
         else:
             documented.add(token)
     for name in variant_names():
-        if name not in documented:
-            failures.append(f"docs/VARIANTS.md: variant {name!r} undocumented")
+        if name in documented:
+            continue
+        if any(p.fullmatch(name) for p in family_patterns):
+            continue
+        failures.append(f"docs/VARIANTS.md: variant {name!r} undocumented")
 
 
 def main() -> int:
