@@ -9,11 +9,14 @@ the bounded-injection fabric must exercise backpressure and still deliver,
 the eager path must use strictly fewer fabric messages than rendezvous for
 sub-threshold parcels, a small DES flood must complete on the main variants
 (including ``lci_agg_eager``) with ZERO backpressure under the unbounded
-model, and a small-queue DES config must report nonzero
+model, a small-queue DES config must report nonzero
 ``backpressure_events`` while still delivering everything with the send
-ring never exceeding its depth.  Results land in
-``experiments/bench/smoke.json`` (the CI artifact) and the exit code is
-non-zero on any failure.
+ring never exceeding its depth, the explicit and implicit progress
+policies of the ONE shared ProgressEngine must deliver the same payload
+set on the functional core (delivery parity), and the tiny
+``progress_contention`` ladder (policy × worker count, §5.3) must
+REPRODUCE every claim.  Results land in ``experiments/bench/smoke.json``
+(the CI artifact) and the exit code is non-zero on any failure.
 """
 from __future__ import annotations
 
@@ -159,6 +162,54 @@ def smoke() -> int:
     except Exception as exc:  # noqa: BLE001
         traceback.print_exc()
         failures.append(f"des_bounded: {exc}")
+
+    # 6. the shared progress engine: explicit vs implicit policy must make
+    # identical delivery decisions on the functional core (parity)
+    try:
+        from repro.core.lci_parcelport import LCIParcelport
+        from repro.core.parcelport import World
+        from repro.core.variants import VARIANTS
+
+        payloads = [bytes([s % 251]) * s for s in SMOKE_PAYLOAD_SIZES]
+        delivered = {}
+        for mode in ("explicit", "implicit"):
+            cfg = VARIANTS["lci"].variant(name=f"lci_{mode}", progress_mode=mode)
+            world = World(2, lambda loc, fab: LCIParcelport(loc, fab, cfg),
+                          devices_per_rank=cfg.ndevices)
+            got: list = []
+            for loc in world.localities:
+                loc.register_action("sink", lambda *a, _g=got: _g.append(a))
+            for i, pl in enumerate(payloads):
+                world.localities[i % 2].async_action((i + 1) % 2, "sink", pl)
+            world.drain(max_rounds=50_000)
+            delivered[mode] = sorted(len(a[0]) for a in got)
+        results["progress_pair"] = delivered
+        if delivered["explicit"] != delivered["implicit"]:
+            raise RuntimeError(f"explicit/implicit delivery parity broken: {delivered}")
+        if delivered["explicit"] != sorted(SMOKE_PAYLOAD_SIZES):
+            raise RuntimeError(f"progress pair lost parcels: {delivered}")
+        print("smoke engine explicit==implicit delivery parity ok")
+    except Exception as exc:  # noqa: BLE001
+        traceback.print_exc()
+        failures.append(f"progress_pair: {exc}")
+
+    # 7. progress-policy ladder (§5.3): the tiny contention study's claims
+    # must all REPRODUCE (policy x worker count on the one shared engine)
+    try:
+        from . import message_rate
+
+        _rows, pc_data, pc_claims = message_rate.progress_contention(smoke=True)
+        results["progress_contention"] = {
+            "rates": {k: {str(t): r for t, r in v.items()} for k, v in pc_data["rates"].items()},
+            "claims": [c.row() for c in pc_claims],
+        }
+        bad = [c.claim for c in pc_claims if not c.ok]
+        if bad:
+            raise RuntimeError(f"progress_contention claims not reproduced: {bad}")
+        print(f"smoke progress_contention ok  ({len(pc_claims)} claims REPRODUCED)")
+    except Exception as exc:  # noqa: BLE001
+        traceback.print_exc()
+        failures.append(f"progress_contention: {exc}")
 
     results["failures"] = failures
     results["elapsed"] = time.time() - t0

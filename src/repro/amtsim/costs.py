@@ -94,6 +94,15 @@ class Mechanisms:
     # pool probe before the library parks the post for retry
     t_post_eagain: float = 0.03 * US
 
+    # RNR retry storms (§3.1): with ``SimConfig.rnr_storm`` set, a
+    # receiver-not-ready arrival is retransmitted by the NIC after this
+    # base backoff, doubling per failed attempt (capped at 64x) — instead
+    # of the free redelivery-on-reap of the default model.  Real HDR-IB
+    # RNR timers are far larger; this value is scaled to the simulated
+    # µs regime so storms visibly collapse throughput without freezing
+    # the event loop.
+    t_rnr_retry: float = 2.0 * US
+
     # locks (§5.3).  Beyond FIFO serialization, every blocking acquisition
     # pays a penalty per waiter queued behind the lock — cache-line
     # bouncing / futex wakeups scale with the contender count, which is the

@@ -14,9 +14,23 @@ calibrated cost (:mod:`repro.amtsim.costs`) on a discrete-event kernel
 * devices are injection channels: a message occupies its device for
   ``max(inj_overhead, bytes/bandwidth)`` and lands in the destination
   device's completion queue after ``wire_latency``;
-* completion queues (LCRQ/MS/lock), synchronizer pools, tag matching,
-  MPI_Test-only implicit progress, parcel aggregation, and the
-  Slingshot-11 libfabric CQ lock (§4.2.3) are explicit costs or DES locks.
+* completion queues (LCRQ/MS/lock, shared or per-device via ``cq_scope``),
+  synchronizer pools, tag matching, MPI_Test-only implicit progress, parcel
+  aggregation, and the Slingshot-11 libfabric CQ lock (§4.2.3) are explicit
+  costs or DES locks.
+
+**The progress engine is not re-implemented here.**  ``background_work``
+drives the SAME :class:`~repro.core.comm.progress.ProgressEngine` the
+functional parcelports run — one canonical step loop (drain retries →
+progress device(s) → reap completions → dispatch by kind), parameterized
+by a :class:`~repro.core.comm.progress.ProgressPolicy` — through a
+clock/cost adapter: each engine op charges its calibrated
+:class:`~repro.amtsim.costs.Mechanisms` cost, and lock ops acquire real DES
+locks so contention is *simulated*, never re-coded.  Because both layers
+replay one decision sequence, their protocol-path and completion-dispatch
+choices cannot drift (tests/test_progress_engine.py compares ordered
+decision traces).  ``SimConfig.progress_workers`` reserves cores that only
+drive the engine (§3.3.4's omitted experiment, the ``lci_prg{n}`` family).
 
 Follow-up (zero-copy) chunks use a rendezvous: the receiver processes the
 header, allocates buffers, posts the receive, and only then does the wire
@@ -41,11 +55,17 @@ With ``limits.recv_slots`` set, the *receive* side is bounded the same way
 receive descriptor still un-reaped is an **RNR** (receiver-not-ready)
 event — counted in ``SimWorld.rnr_events``, parked on the destination
 device, and redelivered once the receiver's progress engine reaps backlog
-(hardware retransmission, not message loss).  Occupancy high-water marks
-(send ring, bounce pool, retry queue) and the RNR count are reported by
-:meth:`SimWorld.injection_stats`.  All limits default to 0 (unbounded):
-the classic model is bit-identical unless a config opts in, and send
-completions are only materialized as CQ traffic in bounded mode.
+(hardware retransmission, not message loss).  ``SimConfig.rnr_storm``
+upgrades that free redelivery to the paper's §3.1 storm model: each RNR'd
+arrival is retransmitted after an exponential backoff charged on
+``Mechanisms.t_rnr_retry`` (doubling per failed attempt, capped), every
+retransmission counted in ``SimWorld.rnr_retries`` — retry storms now cost
+wire time, which is how they collapse throughput on real hardware.
+Occupancy high-water marks (send ring, bounce pool, retry queue) and the
+RNR counters are reported by :meth:`SimWorld.injection_stats`.  All limits
+default to 0 (unbounded): the classic model is bit-identical unless a
+config opts in, and send completions are only materialized as CQ traffic
+in bounded mode.
 
 **Modeled:** thread overlap/contention, per-mechanism software costs, wire
 serialization, protocol round trips, aggregation (optionally packed up to
@@ -64,6 +84,14 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, Generator, List, Optional, Tuple
 
+from ..core.comm.progress import (
+    ROLE_PROGRESS,
+    ROLE_TASK,
+    CompletionRouter,
+    CompletionSource,
+    ProgressEngine,
+    ProgressPolicy,
+)
 from ..core.comm.resources import ResourceLimits
 from ..core.device import LockMode
 from ..core.lci_parcelport import LCIPPConfig
@@ -88,11 +116,15 @@ class SimConfig:
     header_comp: str = "queue"  # 'queue' | 'sync'
     followup_comp: str = "queue"  # 'queue' | 'sync'
     cq_kind: str = "lcrq"
+    # Completion-queue topology (§3.3.3, mirrors LCIPPConfig.cq_scope):
+    # 'shared' = one queue per rank (contention pools across devices);
+    # 'device' = one per device (contention scoped to each device).
+    cq_scope: str = "shared"
     ndevices: int = 2
     lock_mode: str = LockMode.NONE
     progress_mode: str = "explicit"  # 'explicit' | 'implicit'
     # paper §3.3.4's omitted experiment: reserve n cores that ONLY drive
-    # the progress engine (never execute tasks)
+    # the progress engine (never execute tasks) — the lci_prg{n} family
     progress_workers: int = 0
     # Protocol engine: payloads up to this size ship as ONE eager message
     # (bounce-buffer copy cost, no rendezvous round trip); 0 disables the
@@ -102,6 +134,11 @@ class SimConfig:
     # aggregation drain packs parcels into batches of at most
     # eager_threshold bytes, so each aggregate still ships eager.
     agg_eager: bool = False
+    # RNR retry storms (§3.1, the ROADMAP follow-up): RNR'd arrivals are
+    # retransmitted under exponential backoff charged on t_rnr_retry
+    # instead of redelivered free on reap.  Only meaningful with
+    # limits.recv_slots > 0; the default keeps the model bit-identical.
+    rnr_storm: bool = False
     # Bounded injection/receive (§3.3.4): the SAME ResourceLimits object
     # the functional fabric consumes — never per-field mirrors (gated by
     # tools/check_api.py).  A refused post costs t_post_eagain and parks in
@@ -135,29 +172,40 @@ class SimConfig:
         return self.limits.bounded
 
 
+#: LCIPPConfig fields copied verbatim into SimConfig — the shared variant
+#: axes.  Exhaustive by construction: tests/test_progress_engine.py fails
+#: if LCIPPConfig grows a shared knob that is not mapped here.
+SHARED_CONFIG_FIELDS = (
+    "aggregation",
+    "header_mode",
+    "header_comp",
+    "followup_comp",
+    "cq_kind",
+    "cq_scope",
+    "ndevices",
+    "lock_mode",
+    "progress_mode",
+    "progress_workers",
+    "eager_threshold",
+    "agg_eager",
+    "limits",
+)
+
+
 def sim_config_for_variant(name: str) -> SimConfig:
-    """Translate a :mod:`repro.core.variants` name into a SimConfig."""
+    """Translate ANY :mod:`repro.core.variants` name into a SimConfig.
+
+    Resolution goes through the registry view, so parameterized family
+    members (``lci_b8``, ``lci_prg2``, ``lci_eager_32k``) resolve on demand
+    exactly like fixed names; the field mapping covers every shared axis,
+    and ``limits`` is the SAME object the functional variant resolves to —
+    the two layers cannot drift (gated by tools/check_api.py)."""
     if name == "mpi":
         return SimConfig(name="mpi", mpi=True, ndevices=1, lock_mode=LockMode.BLOCK)
     if name == "mpi_a":
         return SimConfig(name="mpi_a", mpi=True, aggregation=True, ndevices=1, lock_mode=LockMode.BLOCK)
     cfg: LCIPPConfig = VARIANTS[name]
-    return SimConfig(
-        name=name,
-        aggregation=cfg.aggregation,
-        header_mode=cfg.header_mode,
-        header_comp=cfg.header_comp,
-        followup_comp=cfg.followup_comp,
-        cq_kind=cfg.cq_kind,
-        ndevices=cfg.ndevices,
-        lock_mode=cfg.lock_mode,
-        progress_mode=cfg.progress_mode,
-        eager_threshold=cfg.eager_threshold,
-        agg_eager=cfg.agg_eager,
-        # the SAME resource object the functional fabric would be built
-        # with — the lci_b{depth} family bounds both layers identically
-        limits=cfg.limits,
-    )
+    return SimConfig(name=name, **{f: getattr(cfg, f) for f in SHARED_CONFIG_FIELDS})
 
 
 @dataclass
@@ -227,9 +275,8 @@ class _SimDevice:
     in ``parked`` until background work retries them.  With
     ``limits.recv_slots`` set the receive side is bounded too: an arrival
     beyond the posted-receive depth is RNR'd into ``rnr_parked`` and
-    redelivered once progress reaps backlog (the fabric's
-    ``_pending_sends`` + ``hw_progress`` retransmission, as one queue on
-    the receiver)."""
+    redelivered once progress reaps backlog — or, under ``rnr_storm``,
+    retransmitted with exponential backoff and counted per retry."""
 
     __slots__ = (
         "env",
@@ -238,6 +285,7 @@ class _SimDevice:
         "inj_lock",
         "coarse",
         "cq",
+        "cq_accessors",
         "stats_injected",
         "inflight",
         "inflight_hw",
@@ -249,6 +297,7 @@ class _SimDevice:
         "recv_backlog",
         "rnr_parked",
         "stats_rnr",
+        "stats_rnr_retries",
     )
 
     def __init__(self, env: Env, rank: "SimRank", index: int):
@@ -258,6 +307,7 @@ class _SimDevice:
         self.inj_lock = Lock(env)  # fine-grained send-queue lock (always present)
         self.coarse = Lock(env)  # coarse library lock (block/try variants)
         self.cq: List[Tuple[str, _Message]] = []
+        self.cq_accessors = 0  # per-device CQ users (cq_scope='device')
         self.stats_injected = 0
         # bounded-injection state (§3.3.4)
         self.inflight = 0  # occupied send-ring slots
@@ -272,6 +322,7 @@ class _SimDevice:
         self.recv_backlog = 0
         self.rnr_parked: Deque[Tuple[str, _Message]] = deque()
         self.stats_rnr = 0
+        self.stats_rnr_retries = 0
 
 
 class SimRank:
@@ -309,13 +360,14 @@ class SimRank:
 class SimWorker:
     """One HPX worker thread (a DES process)."""
 
-    __slots__ = ("rank", "wid", "env", "executed")
+    __slots__ = ("rank", "wid", "env", "executed", "role")
 
-    def __init__(self, rank: SimRank, wid: int):
+    def __init__(self, rank: SimRank, wid: int, role: str = ROLE_TASK):
         self.rank = rank
         self.wid = wid
         self.env = rank.env
         self.executed = 0
+        self.role = role
 
     def run(self) -> Generator:
         world = self.rank.world
@@ -351,6 +403,39 @@ class SimWorker:
                 yield Timeout(min(base_sleep * (1 + idle_streak // 8), 3e-6))
 
 
+def _build_engine(cfg: SimConfig) -> ProgressEngine:
+    """The DES half of the shared-engine contract: the SAME policy builder
+    the functional parcelports use, with this layer's completion sources.
+
+    The DES fuses hardware CQ and client completion delivery into one
+    queue, so its router has two sources: the cost-only client-side poll
+    (``client_poll``) and the per-device hardware CQ (``dev_cq``) — the
+    latter reaped under the policy's coarse lock and owned by the progress
+    side, which is what dedicated ``ROLE_PROGRESS`` workers sweep (on
+    every device).  The MPI family reaps its request pools instead, one
+    round-robin MPI_Test each per step (§3.3.2)."""
+    policy = ProgressPolicy.for_config(cfg)
+    if cfg.mpi:
+        router = CompletionRouter(
+            [
+                CompletionSource("mpi_header", batch=1),
+                CompletionSource("mpi_pool", batch=1),
+            ],
+            ndevices=1,
+        )
+        return ProgressEngine(policy, router, ndevices=1)
+    router = CompletionRouter(
+        [
+            CompletionSource("client_poll", batch=1),
+            CompletionSource(
+                "dev_cq", batch=16, per_device=True, sweep="own", locked=True, progress_side=True
+            ),
+        ],
+        ndevices=cfg.ndevices,
+    )
+    return ProgressEngine(policy, router, ndevices=cfg.ndevices)
+
+
 class SimWorld:
     """The simulated cluster running one parcelport variant."""
 
@@ -375,31 +460,55 @@ class SimWorld:
         self.byte_count = 0
         self.backpressure_events = 0  # EAGAIN-style post refusals (§3.3.4)
         self.rnr_events = 0  # receiver-not-ready arrival refusals
+        self.rnr_retries = 0  # storm-mode retransmission attempts (§3.1)
+        if cfg.progress_workers >= workers_per_rank:
+            # every core reserved for the engine leaves nobody to pop the
+            # run queue: tasks would sit forever and the workload would
+            # silently spin to its time cap — fail fast instead
+            raise ValueError(
+                f"progress_workers={cfg.progress_workers} must be < "
+                f"workers_per_rank={workers_per_rank} (no task workers left)"
+            )
+        # ONE progress engine for the whole world: pure decision logic —
+        # per-rank state stays on the ranks; this driver charges the costs.
+        self._engine = _build_engine(cfg)
         for r in self.ranks:
             for w in range(workers_per_rank):
-                wk = SimWorker(r, w)
-                self.workers.append(wk)
                 if w < cfg.progress_workers:
+                    wk = SimWorker(r, w, role=ROLE_PROGRESS)
+                    self.workers.append(wk)
                     self.env.process(self._progress_worker(wk))
                 else:
+                    wk = SimWorker(r, w)
+                    self.workers.append(wk)
                     self.env.process(wk.run())
 
+    @property
+    def engine(self) -> ProgressEngine:
+        """The shared progress engine (decision-trace hub for parity tests)."""
+        return self._engine
+
     def _progress_worker(self, wk: SimWorker) -> Generator:
-        """A core dedicated to the progress engine (paper §3.3.4 option)."""
+        """A core dedicated to the progress engine (§3.3.4, ``lci_prg{n}``):
+        the same engine step in its progress role — hardware-CQ sweep on
+        EVERY device plus the retry drain of its own mapped device, no
+        client-side completion objects.  (Other devices' parked posts are
+        drained by the task workers mapped to them, each step.)"""
         while not self.stopped:
-            progressed = yield from self.background_work(wk)
+            progressed = yield from self.background_work(wk, role=ROLE_PROGRESS)
             if not progressed:
                 yield Timeout(0.3e-6)
 
     # --------------------------------------------------------------- helpers
     def injection_stats(self) -> Dict[str, int]:
         """Aggregate bounded-injection/receive counters across every
-        device: EAGAIN refusal and RNR counts plus occupancy high-water
-        marks for the send ring, the bounce pool, and the parked-post
-        retry queue."""
+        device: EAGAIN refusal, RNR and RNR-retransmission counts plus
+        occupancy high-water marks for the send ring, the bounce pool, and
+        the parked-post retry queue."""
         stats = {
             "backpressure_events": self.backpressure_events,
             "rnr_events": self.rnr_events,
+            "rnr_retries": self.rnr_retries,
             "send_queue_hw": 0,
             "bounce_in_use_hw": 0,
             "retry_queue_hw": 0,
@@ -538,6 +647,11 @@ class SimWorld:
         # an eager message (whole parcel in one shot, no follow-ups) draws a
         # registered bounce buffer while in flight
         eager = cfg.eager_threshold > 0 and piggy == op.size and not op.followup_chunks
+        # normalized protocol-path decision (the engine-parity trace): the
+        # MPI family has no eager path, whatever its threshold default says
+        self._engine.record(
+            "send", "eager" if (eager and not cfg.mpi) else "rdv", len(op.followup_chunks)
+        )
         # Lock discipline.  Sends take the coarse lock *blocking* even in the
         # 'try' variants — paper footnote 1: only progress can use try locks.
         locked = cfg.mpi or cfg.lock_mode in (LockMode.BLOCK, LockMode.TRY)
@@ -590,7 +704,7 @@ class SimWorld:
     def _drain_parked(self, dev: _SimDevice) -> Generator:
         """Retry up to ``retry_budget`` parked posts, oldest first; stop at
         the first refusal (the fabric freed nothing — throttle instead of
-        hammering, mirroring ``LCIParcelport._drain_retries``)."""
+        hammering, mirroring ``ParcelportBase._drain_retries``)."""
         moved = False
         for _ in range(self.cfg.retry_budget):
             if not dev.parked:
@@ -640,7 +754,7 @@ class SimWorld:
             # the send completion lands in OUR hardware CQ once the DMA
             # drains off the ring; the slot stays occupied until progress
             # reaps it — not polling your own CQ throttles your injection,
-            # exactly like the functional fabric (NetDevice.poll_cq).
+            # exactly like the functional fabric (the engine's progress op).
             self.env.process(self._send_done_later(dev, msg, done - now))
 
     def _arrive_later(self, dst_dev: _SimDevice, msg: _Message, delay: float) -> Generator:
@@ -652,24 +766,46 @@ class SimWorld:
         """Land an arrival in the destination device's hardware CQ.  With
         ``limits.recv_slots`` set, each un-reaped arrival occupies one
         posted receive descriptor; an arrival that finds none free is a
-        **receiver-not-ready** event, counted and parked for redelivery
-        once the receiver's progress engine reaps backlog — the DES
-        counterpart of ``NetDevice._try_deliver`` refusing into
-        ``_pending_sends`` and ``hw_progress`` retrying."""
+        **receiver-not-ready** event.  Default model: parked for free
+        redelivery once the receiver's progress engine reaps backlog (the
+        fabric's ``_pending_sends`` + ``hw_progress`` retransmission, as
+        one queue on the receiver).  ``rnr_storm`` model: retransmitted
+        after an exponential backoff charged on ``t_rnr_retry`` — retry
+        storms burn wire time (§3.1)."""
         rs = self.cfg.recv_slots
         if rs > 0 and dst_dev.recv_backlog >= rs:
             dst_dev.stats_rnr += 1
             self.rnr_events += 1
-            dst_dev.rnr_parked.append((kind, msg))
+            if self.cfg.rnr_storm:
+                self.env.process(self._rnr_retransmit(dst_dev, kind, msg, attempt=1))
+            else:
+                dst_dev.rnr_parked.append((kind, msg))
             return
         if rs > 0:
             dst_dev.recv_backlog += 1
         dst_dev.cq.append((kind, msg))
 
+    def _rnr_retransmit(self, dst_dev: _SimDevice, kind: str, msg: _Message, attempt: int) -> Generator:
+        """Storm-mode RNR retransmission: back off ``t_rnr_retry * 2^(n-1)``
+        (capped at 64x), then retry admission; every attempt is counted in
+        ``rnr_retries`` and every further refusal in ``rnr_events``."""
+        yield Timeout(self.mech.t_rnr_retry * min(2 ** (attempt - 1), 64))
+        self.rnr_retries += 1
+        dst_dev.stats_rnr_retries += 1
+        rs = self.cfg.recv_slots
+        if dst_dev.recv_backlog >= rs:
+            dst_dev.stats_rnr += 1
+            self.rnr_events += 1
+            self.env.process(self._rnr_retransmit(dst_dev, kind, msg, attempt + 1))
+            return
+        dst_dev.recv_backlog += 1
+        dst_dev.cq.append((kind, msg))
+
     def _reap_arrival(self, dev: _SimDevice, kind: str) -> None:
         """Bookkeeping when a CQ entry is reaped: a consumed arrival frees
         its receive descriptor (send_done entries never held one), letting
-        RNR-parked arrivals redeliver in order."""
+        RNR-parked arrivals redeliver in order (default model; storm mode
+        redelivers through timed retransmission instead)."""
         rs = self.cfg.recv_slots
         if rs <= 0:
             return
@@ -685,74 +821,192 @@ class SimWorld:
         dev.cq.append(("send_done", msg))
 
     # -------------------------------------------------------------- progress
-    def background_work(self, worker: SimWorker) -> Generator:
-        if self.cfg.mpi:
-            return (yield from self._mpi_background_work(worker))
-        return (yield from self._lci_background_work(worker))
+    def background_work(self, worker: SimWorker, role: str = ROLE_TASK) -> Generator:
+        """Drive ONE step of the shared :class:`ProgressEngine` through the
+        clock/cost adapter: the engine decides the op sequence (the same
+        sequence the functional parcelports execute); this driver charges
+        each op's calibrated cost and simulates its lock contention.  It is
+        the only place completions are reaped or dispatched — gated by
+        tools/check_api.py against re-grown private loops."""
+        mech, cfg, plat = self.mech, self.cfg, self.platform
+        rank = worker.rank
+        gen = self._engine.step(worker.wid, role)
+        to_deliver: List[ParcelOp] = []
+        result: Any = None
+        while True:
+            try:
+                op = gen.send(result)
+            except StopIteration as stop:
+                return bool(stop.value)
+            kind = op[0]
+            result = None
+            if kind == "reap":
+                name = op[1].name
+                if name == "dev_cq":
+                    dev = rank.devices[op[2]]
+                    if dev.cq:
+                        ckind, msg = dev.cq.pop(0)
+                        self._reap_arrival(dev, ckind)
+                        yield Timeout(mech.t_per_completion)
+                        result = (ckind, msg)
+                elif name == "client_poll":
+                    # client-side completion poll: queue pop is cheap; the
+                    # synchronizer pool is MPI-ish (cost only — delivery is
+                    # fused into the dev_cq reaps in this layer)
+                    yield from self._poll_completion_objects(worker)
+                elif name == "mpi_header":
+                    # test the pre-posted any-source header request
+                    yield Timeout(mech.t_mpi_test)
+                    msg = rank.mpi_header_req
+                    if msg is not None:
+                        rank.mpi_header_req = (
+                            rank.mpi_header_backlog.pop(0) if rank.mpi_header_backlog else None
+                        )
+                        result = msg
+                else:  # mpi_pool: ONE request, round-robin (§3.3.2)
+                    yield Timeout(mech.t_mpi_test)
+                    if rank.mpi_pool:
+                        req = rank.mpi_pool.pop(0)
+                        if req.done:
+                            result = req
+                        else:
+                            rank.mpi_pool.append(req)
+            elif kind == "dispatch":
+                name, item = op[1].name, op[3]
+                if name == "dev_cq":
+                    ckind, msg = item
+                    yield from self._handle_completion(worker, rank.devices[op[2]], ckind, msg)
+                    result = True
+                elif name == "mpi_header":
+                    yield Timeout(mech.t_tag_match + mech.t_post_recv)  # match + re-post
+                    self._engine.record("header", "rdv")
+                    pop = item.parcel
+                    if pop.followup_chunks:
+                        req = _MPIReq("recv", pop)
+                        pop.mpi_recv_req = req
+                        rank.mpi_pool.append(req)
+                        yield Timeout(mech.t_post_recv)
+                        self._spawn_followup(pop)
+                    else:
+                        to_deliver.append(pop)
+                    result = True
+                else:  # mpi_pool
+                    req = item
+                    if req.kind == "followup_gate":
+                        self.env.process(self._mpi_rts(req.op))
+                    elif req.kind == "cts_gate":
+                        self.env.process(self._mpi_cts(req.op))
+                    elif req.kind == "recv":
+                        self._engine.record("chunk")
+                        pop = req.op
+                        pop.chunk_idx += 1
+                        if pop.chunk_idx < len(pop.followup_chunks):
+                            nreq = _MPIReq("recv", pop)
+                            pop.mpi_recv_req = nreq
+                            rank.mpi_pool.append(nreq)
+                            yield Timeout(mech.t_post_recv)
+                            self._spawn_followup(pop)
+                        else:
+                            to_deliver.append(pop)
+                    result = True
+            elif kind == "reap_begin":
+                if op[1].name == "dev_cq":
+                    if plat.libfabric_cq_lock:
+                        # Slingshot-11: libfabric serializes CQ polling on a
+                        # spin lock — 85% of Octo-Tiger time on Delta/32
+                        # nodes (paper §4.2.3).
+                        yield from self._lock_with_contention(rank.lf_lock)
+                        yield Timeout(plat.progress_lock_cost)
+                    yield Timeout(mech.t_progress_poll)
+            elif kind == "reap_end":
+                if op[1].name == "dev_cq" and plat.libfabric_cq_lock:
+                    rank.lf_lock.release()
+            elif kind == "drain_retries":
+                dev = rank.device_for_worker(worker.wid)
+                if dev.parked:
+                    result = yield from self._drain_parked(dev)
+            elif kind == "progress":
+                # LCI: the hardware CQ *is* the completion source, so the
+                # explicit-progress op is fused into the dev_cq reaps; the
+                # MPI library drains hardware arrivals into MPI-internal
+                # state here (noticed later, one MPI_Test at a time).
+                if cfg.mpi:
+                    result = yield from self._mpi_drain_hw(rank.devices[op[1]])
+            elif kind == "implicit_tax":
+                # implicit progress rides on a (possibly failed) completion
+                # test: charge one test per step (progress at reduced rate)
+                yield Timeout(mech.t_sync_test)
+            elif kind == "dev_lock":
+                yield from self._lock_with_contention(rank.devices[op[1]].coarse)
+            elif kind == "dev_trylock":
+                if rank.devices[op[1]].coarse.try_acquire():
+                    result = True
+                else:
+                    yield Timeout(mech.t_try_fail)
+            elif kind == "dev_unlock":
+                rank.devices[op[1]].coarse.release()
+            elif kind == "step_trylock":
+                # MPI request-pool discipline: concurrent testing of a
+                # shared request is disallowed (MPI 4.1 §12.6.2)
+                if rank.pool_lock.try_acquire():
+                    result = True
+                else:
+                    yield Timeout(mech.t_try_fail)
+            elif kind == "step_unlock":
+                rank.pool_lock.release()
+            elif kind == "big_lock":
+                yield from self._lock_with_contention(rank.devices[0].coarse)
+            elif kind == "big_unlock":
+                rank.devices[0].coarse.release()
+            elif kind == "flush":
+                # handle_parcel runs outside the library locks (MPI)
+                for pop in to_deliver:
+                    yield from self._deliver(worker, pop)
+                to_deliver.clear()
+            # "poll": nothing to charge — LCI's completion-test-driven
+            # progress is the dev_cq reap itself (taxed by implicit_tax)
 
-    def _lci_background_work(self, worker: SimWorker) -> Generator:
-        mech, cfg = self.mech, self.cfg
-        dev = worker.rank.device_for_worker(worker.wid)
-        # client-side completion poll (queue pop is cheap; sync pool = MPI-ish)
-        yield from self._poll_completion_objects(worker)
-        if cfg.progress_mode == "implicit":
-            # progress only rides on a failed completion test (MPI behaviour):
-            # charge one test and fall through to the engine at reduced rate.
-            yield Timeout(mech.t_sync_test)
-        # progress engine invocation, per lock discipline (§5.3)
-        if cfg.lock_mode == LockMode.BLOCK:
-            yield from self._lock_with_contention(dev.coarse)
-        elif cfg.lock_mode == LockMode.TRY:
-            if not dev.coarse.try_acquire():
-                yield Timeout(mech.t_try_fail)
-                return False
-        moved = yield from self._progress_device(worker, dev)
-        if cfg.lock_mode in (LockMode.BLOCK, LockMode.TRY):
-            dev.coarse.release()
-        if dev.parked:
-            # progress reaped send completions above, so ring slots / bounce
-            # buffers may have freed: retry parked posts under the budget
-            moved = (yield from self._drain_parked(dev)) or moved
-        return moved
-
-    def _progress_device(self, worker: SimWorker, dev: _SimDevice) -> Generator:
-        """Poll one device's hardware CQ; handle completions."""
-        mech, plat = self.mech, self.platform
-        if plat.libfabric_cq_lock:
-            # Slingshot-11: libfabric serializes CQ polling on a spin lock —
-            # 85% of Octo-Tiger time on Delta/32 nodes (paper §4.2.3).
-            yield from self._lock_with_contention(worker.rank.lf_lock)
-            yield Timeout(plat.progress_lock_cost)
-        yield Timeout(mech.t_progress_poll)
-        moved = False
-        for _ in range(16):
-            if not dev.cq:
-                break
-            kind, msg = dev.cq.pop(0)
-            self._reap_arrival(dev, kind)
-            moved = True
+    def _mpi_drain_hw(self, dev: _SimDevice) -> Generator:
+        """The MPI library's implicit progress (the engine's ``progress``
+        op, §3.3.4): drain hardware arrivals into MPI-internal completion
+        state.  Completion of a specific request is only *noticed* later,
+        when its turn comes up in the round-robin MPI_Test (§3.3.2)."""
+        mech = self.mech
+        rank = dev.rank
+        while dev.cq:
+            ckind, msg = dev.cq.pop(0)
+            self._reap_arrival(dev, ckind)
             yield Timeout(mech.t_per_completion)
-            yield from self._handle_completion(worker, dev, kind, msg)
-        if plat.libfabric_cq_lock:
-            worker.rank.lf_lock.release()
-        return moved
+            if ckind == "send_done":
+                self._release_slot(dev, msg)
+            elif ckind == "header":
+                if rank.mpi_header_req is None:
+                    rank.mpi_header_req = msg  # matches the pre-posted recv
+                else:
+                    rank.mpi_header_backlog.append(msg)  # unexpected queue
+            else:
+                msg.parcel.mpi_recv_req.done = True
+        return False
 
     def _handle_completion(self, worker: SimWorker, dev: _SimDevice, kind: str, msg: _Message) -> Generator:
+        """Dispatch-by-kind for one reaped completion — called ONLY from
+        the engine driver (`background_work`), never from private loops."""
         mech, cfg = self.mech, self.cfg
         op = msg.parcel
         rank = worker.rank
         if kind == "send_done":
             # reaping the send completion frees the ring slot / bounce
             # buffer (bounded-injection mode only; t_per_completion already
-            # charged by the progress loop)
+            # charged by the engine's reap op)
             self._release_slot(dev, msg)
             return
         if kind == "header":
+            self._engine.record("header", "eager" if (msg.eager and not cfg.mpi) else "rdv")
             if cfg.header_mode == "put":
                 # dynamic put: no matching; buffer goes straight to the client
                 yield Timeout(mech.t_put_deliver)
-                yield from self._cq_cost(rank, "push")
-                yield from self._cq_cost(rank, "pop")
+                yield from self._cq_cost(rank, "push", dev)
+                yield from self._cq_cost(rank, "pop", dev)
             else:
                 # two-sided: the matching→signaling path is a sequential
                 # bottleneck (§3.3.1) — serialized, but with no futex storm
@@ -762,8 +1016,8 @@ class SimWorld:
                     # one pre-posted receive at a time; cheap 4 B signal
                     yield Timeout(mech.t_sync_signal + mech.t_sync_test)
                 else:
-                    yield from self._cq_cost(rank, "push")
-                    yield from self._cq_cost(rank, "pop")
+                    yield from self._cq_cost(rank, "push", dev)
+                    yield from self._cq_cost(rank, "pop", dev)
                 rank.match_lock.release()
             if op.followup_chunks:
                 # rendezvous: allocate zc buffers, post the receive for the
@@ -774,6 +1028,7 @@ class SimWorld:
             else:
                 yield from self._deliver(worker, op)
         else:  # followup chunk op.chunk_idx completed at the receiver
+            self._engine.record("chunk")
             yield Timeout(mech.t_tag_match)
             if cfg.followup_comp == "sync":
                 # request-pool detection: the completion is only *noticed*
@@ -784,8 +1039,8 @@ class SimWorld:
                 yield Timeout(mech.t_sync_signal + 32 * mech.t_sync_test)
                 rank.pool_lock.release()
             else:
-                yield from self._cq_cost(rank, "push")
-                yield from self._cq_cost(rank, "pop")
+                yield from self._cq_cost(rank, "push", dev)
+                yield from self._cq_cost(rank, "pop", dev)
             op.chunk_idx += 1
             if op.chunk_idx < len(op.followup_chunks):
                 yield Timeout(mech.t_post_recv)
@@ -824,24 +1079,30 @@ class SimWorld:
     def _deliver(self, worker: SimWorker, op: ParcelOp) -> Generator:
         """handle_parcel: deserialize + hand the task(s) to the scheduler."""
         mech = self.mech
+        self._engine.record("deliver", op.nparcels)
         yield Timeout(mech.t_handle_parcel * op.nparcels + mech.t_serialize_per_byte * op.total_app_bytes)
         worker.rank.handled += op.nparcels
         if op.on_delivered is not None:
             op.on_delivered()
 
-    def _cq_cost(self, rank: SimRank, what: str) -> Generator:
-        """LCI completion-queue op cost + concurrency penalty (§5.2)."""
+    def _cq_cost(self, rank: SimRank, what: str, dev: Optional[_SimDevice] = None) -> Generator:
+        """LCI completion-queue op cost + concurrency penalty (§5.2).
+
+        The contention pool follows the router's topology (§3.3.3):
+        ``cq_scope='shared'`` counts accessors per rank (one queue across
+        devices); ``'device'`` scopes them to the device's own queue."""
         mech, kind = self.mech, self.cfg.cq_kind
         base = (mech.t_cq_push if what == "push" else mech.t_cq_pop)[kind]
-        rank.cq_accessors += 1
-        penalty = mech.cq_contention[kind] * max(0, rank.cq_accessors - 1)
+        holder = dev if (dev is not None and self.cfg.cq_scope == "device") else rank
+        holder.cq_accessors += 1
+        penalty = mech.cq_contention[kind] * max(0, holder.cq_accessors - 1)
         yield Timeout(base + penalty)
-        rank.cq_accessors -= 1
+        holder.cq_accessors -= 1
 
     def _poll_completion_objects(self, worker: SimWorker) -> Generator:
         mech, cfg = self.mech, self.cfg
         if cfg.followup_comp == "queue":
-            yield from self._cq_cost(worker.rank, "pop")
+            yield from self._cq_cost(worker.rank, "pop", worker.rank.device_for_worker(worker.wid))
             return
         # synchronizer pool: try-lock + one round-robin test (§3.3.2)
         if not worker.rank.pool_lock.try_acquire():
@@ -849,93 +1110,6 @@ class SimWorld:
             return
         yield Timeout(mech.t_sync_test)
         worker.rank.pool_lock.release()
-
-    # ------------------------------------------------------- MPI parcelport
-    def _mpi_background_work(self, worker: SimWorker) -> Generator:
-        """The MPI parcelport's background_work (§3.3):
-
-        * try-lock around the shared request pool (concurrent testing of a
-          shared request is disallowed, MPI 4.1 §12.6.2);
-        * every MPI call runs under the library big lock;
-        * the progress engine runs only as a side effect of MPI_Test — the
-          hardware CQ is drained into MPI-internal completion state;
-        * completion of a specific request is *noticed* only when that
-          request is tested: the pre-posted any-source header recv (one at
-          a time, §3.3.1) plus ONE pool request per call, round-robin.
-        """
-        mech = self.mech
-        rank = worker.rank
-        dev = rank.devices[0]
-        if not rank.pool_lock.try_acquire():
-            yield Timeout(mech.t_try_fail)
-            return False
-        yield from self._lock_with_contention(dev.coarse)  # MPI big lock
-        # implicit progress: drain hardware arrivals into MPI-internal state
-        while dev.cq:
-            kind, msg = dev.cq.pop(0)
-            self._reap_arrival(dev, kind)
-            yield Timeout(mech.t_per_completion)
-            if kind == "send_done":
-                self._release_slot(dev, msg)
-            elif kind == "header":
-                if rank.mpi_header_req is None:
-                    rank.mpi_header_req = msg  # matches the pre-posted recv
-                else:
-                    rank.mpi_header_backlog.append(msg)  # unexpected queue
-            else:
-                msg.parcel.mpi_recv_req.done = True
-        moved = False
-        to_deliver: List[ParcelOp] = []
-        # test the pre-posted any-source header request
-        yield Timeout(mech.t_mpi_test)
-        if rank.mpi_header_req is not None:
-            msg = rank.mpi_header_req
-            yield Timeout(mech.t_tag_match + mech.t_post_recv)  # match + re-post
-            rank.mpi_header_req = (
-                rank.mpi_header_backlog.pop(0) if rank.mpi_header_backlog else None
-            )
-            op = msg.parcel
-            moved = True
-            if op.followup_chunks:
-                req = _MPIReq("recv", op)
-                op.mpi_recv_req = req
-                rank.mpi_pool.append(req)
-                yield Timeout(mech.t_post_recv)
-                self._spawn_followup(op)
-            else:
-                to_deliver.append(op)
-        # test ONE request from the shared pool, round-robin (§3.3.2)
-        yield Timeout(mech.t_mpi_test)
-        if rank.mpi_pool:
-            req = rank.mpi_pool.pop(0)
-            if not req.done:
-                rank.mpi_pool.append(req)
-            else:
-                moved = True
-                if req.kind == "followup_gate":
-                    self.env.process(self._mpi_rts(req.op))
-                elif req.kind == "cts_gate":
-                    self.env.process(self._mpi_cts(req.op))
-                elif req.kind == "recv":
-                    op = req.op
-                    op.chunk_idx += 1
-                    if op.chunk_idx < len(op.followup_chunks):
-                        nreq = _MPIReq("recv", op)
-                        op.mpi_recv_req = nreq
-                        rank.mpi_pool.append(nreq)
-                        yield Timeout(mech.t_post_recv)
-                        self._spawn_followup(op)
-                    else:
-                        to_deliver.append(op)
-        if dev.parked:
-            # MPI flushes its internal backpressure queue while it holds the
-            # big lock (mirrors MPISim's FIFO of refused sends)
-            moved = (yield from self._drain_parked(dev)) or moved
-        dev.coarse.release()
-        rank.pool_lock.release()
-        for op in to_deliver:  # handle_parcel runs outside the library
-            yield from self._deliver(worker, op)
-        return moved
 
     # ------------------------------------------------------------------ API
     def spawn(self, rank: int, task: Task) -> None:

@@ -31,10 +31,12 @@ class MicroResult:
     elapsed: float
     messages: int
     # bounded-injection/receive counters (zero under the classic unbounded
-    # model): EAGAIN refusals, RNR arrival refusals, plus the send-ring /
-    # bounce-pool / retry-queue occupancy high waters
+    # model): EAGAIN refusals, RNR arrival refusals (plus storm-mode
+    # retransmission attempts), and the send-ring / bounce-pool /
+    # retry-queue occupancy high waters
     backpressure_events: int = 0
     rnr_events: int = 0
+    rnr_retries: int = 0
     send_queue_hw: int = 0
     bounce_in_use_hw: int = 0
     retry_queue_hw: int = 0
@@ -56,6 +58,7 @@ class AppResult:
     # bounded-injection/receive counters (zero under the unbounded model)
     backpressure_events: int = 0
     rnr_events: int = 0
+    rnr_retries: int = 0
     send_queue_hw: int = 0
     bounce_in_use_hw: int = 0
     retry_queue_hw: int = 0
@@ -107,6 +110,7 @@ def flood(
         messages=state["delivered"],
         backpressure_events=inj["backpressure_events"],
         rnr_events=inj["rnr_events"],
+        rnr_retries=inj["rnr_retries"],
         send_queue_hw=inj["send_queue_hw"],
         bounce_in_use_hw=inj["bounce_in_use_hw"],
         retry_queue_hw=inj["retry_queue_hw"],
@@ -169,6 +173,7 @@ def chains(
         messages=hops,
         backpressure_events=inj["backpressure_events"],
         rnr_events=inj["rnr_events"],
+        rnr_retries=inj["rnr_retries"],
         send_queue_hw=inj["send_queue_hw"],
         bounce_in_use_hw=inj["bounce_in_use_hw"],
         retry_queue_hw=inj["retry_queue_hw"],
@@ -275,6 +280,7 @@ def octotiger(
         bytes=world.byte_count,
         backpressure_events=inj["backpressure_events"],
         rnr_events=inj["rnr_events"],
+        rnr_retries=inj["rnr_retries"],
         send_queue_hw=inj["send_queue_hw"],
         bounce_in_use_hw=inj["bounce_in_use_hw"],
         retry_queue_hw=inj["retry_queue_hw"],

@@ -130,6 +130,10 @@ class ParcelportBase:
         retry_budget: int = 8,
     ):
         self.locality = locality
+        # The shared progress engine (set by the concrete parcelport once
+        # its policy/router are known); also the decision-trace hub the
+        # engine-parity suite reads.
+        self.engine = None
         self.aggregation = aggregation
         # Threshold-aware aggregation: max projected aggregate size per
         # batch (0 = classic unbounded merge).
@@ -251,7 +255,12 @@ class ParcelportBase:
     def deliver(self, parcel: Parcel) -> None:
         self.stats_received += 1
         if is_aggregate(parcel):
-            for p in split_aggregate(parcel):
+            parcels = split_aggregate(parcel)
+            if self.engine is not None:
+                self.engine.record("deliver", len(parcels))
+            for p in parcels:
                 self.locality.handle_parcel(p)
         else:
+            if self.engine is not None:
+                self.engine.record("deliver", 1)
             self.locality.handle_parcel(parcel)

@@ -8,7 +8,7 @@ Techniques (paper Table 1) and the flag that controls each:
   parcels use the **rendezvous** layout (header + sequential follow-ups).
   ``eager_threshold=0`` disables the eager path (the ``lci_noeager``
   variant).  Backpressured posts (full send queue / exhausted bounce pool,
-  §3.3.4) park in a retry queue that ``background_work`` drains under a
+  §3.3.4) park in a retry queue that the progress engine drains under a
   bounded per-call budget — the sender-side throttle that keeps injection
   inside the fabric's resource limits.
 * **Asynchrony** — ``header_mode``: ``'put'`` uses the one-sided *dynamic
@@ -18,21 +18,36 @@ Techniques (paper Table 1) and the flag that controls each:
   (``header_comp='sync'`` — one pre-posted receive at a time, the variant
   that serializes header processing, §5.1).
 * **Concurrency** — ``followup_comp``: ``'queue'`` routes every completion
-  through one shared MPMC completion queue (``cq_kind`` picks LCRQ /
-  Michael-Scott / lock-based, §5.2); ``'sync'`` uses a synchronizer pool
-  (the request-pool analogue).
+  through MPMC completion queues (``cq_kind`` picks LCRQ / Michael-Scott /
+  lock-based, §5.2); ``'sync'`` uses a synchronizer pool (the request-pool
+  analogue).  ``cq_scope`` picks the queue *topology* (§3.3.3): ``'shared'``
+  — one queue across devices, reducing load imbalance (the default, and the
+  ``lci_shared_cq`` variant) — or ``'device'`` — one queue per device,
+  trading imbalance for less queue contention.  The choice is routed by the
+  engine's :class:`~repro.core.comm.progress.CompletionRouter`.
 * **Multithreading** — ``ndevices`` replicates communication resources with
   a static worker→device mapping; ``lock_mode`` wraps each device in a
   coarse blocking/try lock or leaves it fine-grained (§5.3).
-* **Progress** — ``progress_mode='explicit'`` invokes the device progress
-  engine on every ``background_work``; ``'implicit'`` only when a
-  completion poll comes back empty (the MPI behaviour).
+* **Progress** — the shared :class:`~repro.core.comm.progress.
+  ProgressEngine` drives one canonical step loop; ``progress_mode``
+  selects the :class:`~repro.core.comm.progress.ProgressPolicy`
+  (``'explicit'`` invokes the device progress engine every step,
+  ``'implicit'`` only when a completion poll comes back empty — the MPI
+  behaviour), and ``progress_workers`` reserves that many **dedicated
+  progress threads** (§3.3.4's omitted experiment, the ``lci_prg{n}``
+  family): real daemon threads that drive retries + device progress on
+  every device and never execute tasks or touch client completion objects.
 * **Aggregation** — ``aggregation`` merges same-destination parcels
   (paper §2.2.2); ``agg_eager`` additionally makes the merge
   threshold-aware: the drain packs parcels into aggregates whose projected
   size stays within ``eager_threshold``, so a batch of eager-sized parcels
   fills at most one bounce buffer and never accidentally crosses onto the
   rendezvous path (the ``lci_agg_eager`` variant).
+
+``background_work`` is a thin call into the shared engine: this module
+implements only the op semantics (``execute``) and the per-parcel protocol
+actions the engine dispatches to.  The reap loop itself lives once, in
+:mod:`repro.core.comm.progress` (gated by tools/check_api.py).
 
 Invariant that makes the queue-based path lock-free at this layer: chunks of
 one parcel transfer sequentially, so at most one completion record per
@@ -41,9 +56,19 @@ parcel is in flight, so op state machines are never touched concurrently.
 from __future__ import annotations
 
 import threading
+import time
+import weakref
 from dataclasses import dataclass, field, replace
 from typing import Any, List, Optional, Tuple
 
+from .comm.progress import (
+    ROLE_PROGRESS,
+    CompletionRouter,
+    CompletionSource,
+    ProgressEngine,
+    ProgressPolicy,
+    run_step,
+)
 from .comm.resources import ResourceLimits
 from .completion import (
     CompletionQueue,
@@ -79,9 +104,17 @@ class LCIPPConfig:
     header_comp: str = "queue"  # 'queue' | 'sync'  (sendrecv mode only)
     followup_comp: str = "queue"  # 'queue' | 'sync'
     cq_kind: str = "lcrq"  # 'lcrq' | 'ms' | 'lock'
+    # Completion-queue topology (§3.3.3), routed by the engine's
+    # CompletionRouter: 'shared' = one queue across devices (load balance,
+    # the lci_shared_cq variant and the default); 'device' = one per device.
+    cq_scope: str = "shared"  # 'shared' | 'device'
     ndevices: int = 2
     lock_mode: str = LockMode.NONE
     progress_mode: str = "explicit"  # 'explicit' | 'implicit'
+    # Dedicated progress workers (§3.3.4, the lci_prg{n} family): threads
+    # reserved to drive the progress engine, never executing tasks.  0 =
+    # every worker polls (the paper's recommended configuration).
+    progress_workers: int = 0
     aggregation: bool = False
     # Protocol engine: parcels with total_bytes <= eager_threshold ship as
     # one eager message; 0 disables the eager path entirely.  The default
@@ -130,9 +163,30 @@ class _RecvOp:
         self.idx = 0
 
 
+def _progress_worker_loop(pp_ref: "weakref.ref", stop: threading.Event) -> None:
+    """Body of one dedicated progress thread (§3.3.4, ``lci_prg{n}``).
+
+    Holds only a weak reference: when the owning parcelport is dropped
+    (worlds are short-lived in tests and benchmarks) the thread exits on
+    its own, so un-``close()``d worlds never leak spinning threads."""
+    idle = 0
+    while not stop.is_set():
+        pp = pp_ref()
+        if pp is None:
+            return
+        moved = pp.progress_work()
+        del pp  # drop the strong ref before sleeping so GC can collect
+        if moved:
+            idle = 0
+        else:
+            idle += 1
+            time.sleep(min(20e-6 * (1 + idle // 4), 2e-3))
+
+
 class LCIParcelport(Parcelport):
     def __init__(self, locality: Locality, fabric: Fabric, config: Optional[LCIPPConfig] = None):
         config = config or LCIPPConfig()
+        assert config.cq_scope in ("shared", "device"), config.cq_scope
         agg_limit = config.eager_threshold if (config.agg_eager and config.eager_threshold > 0) else 0
         super().__init__(
             locality,
@@ -142,14 +196,20 @@ class LCIParcelport(Parcelport):
         )
         self.cfg = config
         rank = locality.rank
-        # The shared completion queue (across devices, to reduce load
-        # imbalance — paper §3.3.3).
-        self.cq: CompletionQueue = make_completion_queue(config.cq_kind)
+        # Completion-queue topology (§3.3.3): one shared queue across
+        # devices (reduces load imbalance) or one queue per device (less
+        # queue contention) — the router reaps whichever exists.
+        self._dev_cqs: Optional[List[CompletionQueue]] = None
+        if config.cq_scope == "device":
+            self._dev_cqs = [make_completion_queue(config.cq_kind) for _ in range(config.ndevices)]
+            self.cq: Optional[CompletionQueue] = None
+        else:
+            self.cq = make_completion_queue(config.cq_kind)
         self.sync_pool = SynchronizerPool()
         self.devices: List[LCIDevice] = []
         for d in range(config.ndevices):
             net = fabric.device(rank, d)
-            dev = LCIDevice(net, lock_mode=config.lock_mode, put_target_comp=self.cq)
+            dev = LCIDevice(net, lock_mode=config.lock_mode, put_target_comp=self._cq_for(d))
             self.devices.append(dev)
         # Protocol-path selection by CAPABILITY, not flag alone (§2.3): the
         # one-sided header path needs a backend that advertises dynamic
@@ -167,18 +227,64 @@ class LCIParcelport(Parcelport):
                 self._header_sync = Synchronizer()
                 self.devices[0].post_recv(-1, TAG_HEADER, self._header_sync, ctx="header")
             else:
-                for dev in self.devices:
+                for d, dev in enumerate(self.devices):
                     for _ in range(HEADER_PREPOST):
-                        dev.post_recv(-1, TAG_HEADER, self.cq, ctx=("header", dev))
+                        dev.post_recv(-1, TAG_HEADER, self._cq_for(d), ctx=("header", d))
+        # THE progress engine (shared with the DES): policy + router from
+        # the config, ops executed by this parcelport.
+        self.engine = ProgressEngine(
+            ProgressPolicy.for_config(config),
+            self._build_router(config),
+            ndevices=config.ndevices,
+        )
+        # Dedicated progress threads (lci_prg{n}): drive the engine's
+        # progress role; task workers keep the implicit fallback poll, so
+        # delivery never depends on thread scheduling.
+        self._pw_stop: Optional[threading.Event] = None
+        if config.progress_workers > 0:
+            self._pw_stop = threading.Event()
+            ref = weakref.ref(self)
+            for i in range(config.progress_workers):
+                threading.Thread(
+                    target=_progress_worker_loop,
+                    args=(ref, self._pw_stop),
+                    name=f"lci-prg{rank}.{i}",
+                    daemon=True,
+                ).start()
+
+    def _build_router(self, cfg: LCIPPConfig) -> CompletionRouter:
+        srcs: List[CompletionSource] = []
+        if cfg.followup_comp == "queue" or self._use_put:
+            if cfg.cq_scope == "device":
+                srcs.append(CompletionSource("cq", batch=8, per_device=True, sweep="all"))
+            else:
+                srcs.append(CompletionSource("cq", batch=8))
+        if cfg.followup_comp == "sync":
+            srcs.append(CompletionSource("sync_pool", batch=1))
+        if self._header_sync is not None:
+            srcs.append(CompletionSource("header_sync", batch=1))
+        return CompletionRouter(srcs, ndevices=cfg.ndevices)
+
+    def _cq_for(self, d: int) -> CompletionQueue:
+        """The completion queue serving device ``d`` under the configured
+        scope (shared: one queue for all)."""
+        return self.cq if self._dev_cqs is None else self._dev_cqs[d]
+
+    def close(self) -> None:
+        """Stop the dedicated progress threads (optional; the weakref loop
+        also exits once the parcelport is garbage collected)."""
+        if self._pw_stop is not None:
+            self._pw_stop.set()
 
     # ------------------------------------------------------------------ send
     def _worker_device(self) -> int:
         return get_worker_id() % self.cfg.ndevices
 
-    def _comp_for(self, kind: str, op: Any) -> Any:
-        """Completion object for an operation, per the concurrency flag."""
+    def _comp_for(self, kind: str, op: Any, dev: int) -> Any:
+        """Completion object for an operation, per the concurrency flag and
+        the completion-queue scope."""
         if self.cfg.followup_comp == "queue":
-            return self.cq
+            return self._cq_for(dev)
         sync = Synchronizer()
         self.sync_pool.add(sync, (kind, op))
         return sync
@@ -205,9 +311,10 @@ class LCIParcelport(Parcelport):
         dev = self.devices[d]
         if self._use_eager(parcel, dev):
             # Eager: the whole parcel in one bounce-buffered fabric message.
+            self.engine.record("send", "eager", 0)
             wire = encode_eager(parcel, device_index=d)
             op = _SendOp(dest, parcel, cb, [(TAG_HEADER, wire)], d)
-            comp = self._comp_for("send", op)
+            comp = self._comp_for("send", op, d)
             if self._use_put:
                 self._post_or_park(lambda: dev.post_put_signal(dest, d, wire, comp, ctx=("send", op), eager=True))
             else:
@@ -222,8 +329,9 @@ class LCIParcelport(Parcelport):
             msgs.append((parcel.parcel_id, parcel.nzc_chunk.data))
         for c in parcel.zc_chunks:
             msgs.append((parcel.parcel_id, c.data))
+        self.engine.record("send", "rdv", len(msgs) - 1)
         op = _SendOp(dest, parcel, cb, msgs, d)
-        comp = self._comp_for("send", op)
+        comp = self._comp_for("send", op, d)
         if self._use_put:
             self._post_or_park(lambda: dev.post_put_signal(dest, d, header, comp, ctx=("send", op)))
         else:
@@ -236,7 +344,7 @@ class LCIParcelport(Parcelport):
             tag, data = op.msgs[op.next_idx]
             op.next_idx += 1
             dev = self.devices[op.dev]
-            comp = self._comp_for("send", op)
+            comp = self._comp_for("send", op, op.dev)
             self._post_or_park(lambda: dev.post_send(op.dest, op.dev, tag, data, comp, ctx=("send", op)))
         else:
             if op.cb is not None:
@@ -248,6 +356,7 @@ class LCIParcelport(Parcelport):
         if h.is_eager:
             # Everything arrived inline: copy chunks out of the bounce
             # buffer and deliver — no follow-up receives, no round trips.
+            self.engine.record("header", "eager")
             self.deliver(
                 Parcel(
                     parcel_id=h.parcel_id,
@@ -260,15 +369,17 @@ class LCIParcelport(Parcelport):
                 )
             )
             return
+        self.engine.record("header", "rdv")
         op = _RecvOp(h)
         if h.piggybacked_nzc is not None and not h.zc_sizes:
             self._finish_recv(op)
             return
         dev = self.devices[h.device_index]
-        comp = self._comp_for("recv", op)
+        comp = self._comp_for("recv", op, h.device_index)
         dev.post_recv(h.source, h.parcel_id, comp, ctx=("recv", op))
 
     def _advance_recv(self, op: _RecvOp, rec: CompletionRecord) -> None:
+        self.engine.record("chunk")
         h = op.header
         if op.nzc is None:
             op.nzc = rec.data
@@ -279,7 +390,7 @@ class LCIParcelport(Parcelport):
             op.idx += 1
         if op.idx < len(h.zc_sizes):
             dev = self.devices[h.device_index]
-            comp = self._comp_for("recv", op)
+            comp = self._comp_for("recv", op, h.device_index)
             dev.post_recv(h.source, h.parcel_id, comp, ctx=("recv", op))
         else:
             self._finish_recv(op)
@@ -305,10 +416,10 @@ class LCIParcelport(Parcelport):
             self._process_header(rec.src_rank, rec.data)
             return
         kind_op = rec.ctx
-        if kind_op == ("header",) or (isinstance(kind_op, tuple) and kind_op and kind_op[0] == "header"):
+        if isinstance(kind_op, tuple) and kind_op and kind_op[0] == "header":
             # sendrecv_queue header receive: re-post, then process.
-            dev = kind_op[1]
-            dev.post_recv(-1, TAG_HEADER, self.cq, ctx=("header", dev))
+            d = kind_op[1]
+            self.devices[d].post_recv(-1, TAG_HEADER, self._cq_for(d), ctx=("header", d))
             self._process_header(rec.src_rank, rec.data)
             return
         kind, op = kind_op
@@ -317,48 +428,67 @@ class LCIParcelport(Parcelport):
         else:
             self._advance_recv(op, rec)
 
+    # ------------------------------------------- the progress-engine hookup
     def background_work(self) -> bool:
-        cfg = self.cfg
-        progressed = False
-        my_dev = self.devices[self._worker_device()]
-        if cfg.progress_mode == "explicit":
-            progressed |= my_dev.progress()
-        # Retry backpressured posts before dispatching new completions — the
-        # progress() above reaped send completions, freeing fabric slots.
-        progressed |= self._drain_retries()
+        """One step of the SHARED progress engine (drain retries → progress
+        → reap → dispatch); this parcelport only supplies op semantics."""
+        return run_step(self.engine, self, self._worker_device())
 
-        polled_something = False
-        if cfg.followup_comp == "queue" or self._use_put:
-            for rec in self.cq.drain(8):
-                polled_something = True
-                progressed = True
-                self._dispatch(rec)
-        if cfg.followup_comp == "sync":
-            item = self.sync_pool.poll_one()
-            if item is not None:
-                (kind, op), rec = item
-                polled_something = True
-                progressed = True
-                if kind == "send":
-                    self._advance_send(op)
-                else:
-                    self._advance_recv(op, rec)
-        if self._header_sync is not None:
-            # single-synchronizer header path (sendrecv_sync): try-lock so a
-            # single thread owns the test (MPI-style).
+    def progress_work(self) -> bool:
+        """One dedicated-progress step (ROLE_PROGRESS): retries + device
+        progress on every device; no client-side completion dispatch."""
+        return run_step(self.engine, self, get_worker_id(), role=ROLE_PROGRESS)
+
+    def execute(self, op: tuple) -> Any:
+        """Execute one engine op against the real devices and completion
+        objects (the functional layer's half of the engine contract)."""
+        kind = op[0]
+        if kind == "reap":
+            src, d = op[1], op[2]
+            name = src.name
+            if name == "cq":
+                return (self.cq if d < 0 else self._dev_cqs[d]).reap()
+            if name == "sync_pool":
+                return self.sync_pool.poll_one()
+            # header_sync: single pre-posted receive, one thread owns the
+            # test (MPI-style try-lock); re-post before processing.
             if self._header_sync_lock.acquire(blocking=False):
                 try:
                     rec = self._header_sync.test()
                     if rec is not None:
-                        polled_something = True
-                        progressed = True
                         self.devices[0].post_recv(-1, TAG_HEADER, self._header_sync, ctx="header")
-                        self._process_header(rec.src_rank, rec.data)
+                    return rec
                 finally:
                     self._header_sync_lock.release()
-        if cfg.progress_mode == "implicit" and not polled_something:
+            return None
+        if kind == "dispatch":
+            src, item = op[1], op[3]
+            name = src.name
+            if name == "cq":
+                self._dispatch(item)
+            elif name == "sync_pool":
+                (skind, sop), rec = item
+                if skind == "send":
+                    self._advance_send(sop)
+                else:
+                    self._advance_recv(sop, rec)
+            else:  # header_sync
+                self._process_header(item.src_rank, item.data)
+            return True
+        if kind == "progress":
+            return self.devices[op[1]].progress()
+        if kind == "poll":
             # the MPI behaviour: progress only as a side effect of a failed
             # completion test (the interface's `poll` verb)
-            progressed |= my_dev.poll()
-            progressed |= self._drain_retries()
-        return progressed
+            return self.devices[op[1]].poll()
+        if kind == "drain_retries":
+            return self._drain_retries()
+        if kind in ("dev_trylock", "step_trylock"):
+            # coarse locking is internal to LCIDevice (its lock_mode); the
+            # engine's trylock decision maps to "go ahead" here and the
+            # device's own try-acquire reports contention via progress().
+            return True
+        # dev_lock/dev_unlock/big_*/step_unlock/implicit_tax/reap_begin/
+        # reap_end/flush: cost-model ops — the DES charges them, the
+        # functional layer has nothing to do.
+        return False

@@ -19,6 +19,13 @@ import threading
 from collections import deque
 from typing import Any, Callable, List, Optional, Tuple
 
+from .comm.progress import (
+    CompletionRouter,
+    CompletionSource,
+    ProgressEngine,
+    ProgressPolicy,
+    run_step,
+)
 from .fabric import Fabric
 from .mpi_sim import ANY_SOURCE, MPIRequest, MPISim
 from .parcel import (
@@ -102,6 +109,22 @@ class MPIParcelport(Parcelport):
         self._recv_pool = _RequestPool()
         self._header_lock = threading.Lock()
         self._header_req = self.mpi.irecv(ANY_SOURCE, TAG_HEADER)
+        # The SAME progress engine the LCI parcelport and the DES run: the
+        # MPI structure is just a different ProgressPolicy (whole step
+        # behind the request-pool try-lock + the library big lock, progress
+        # implicit inside MPI_Test) and a router over the request pools —
+        # one test per pool per step, round-robin (§3.3.2).
+        self.engine = ProgressEngine(
+            ProgressPolicy.mpi_request_pool(),
+            CompletionRouter(
+                [
+                    CompletionSource("mpi_header", batch=1),
+                    CompletionSource("send_pool", batch=1),
+                    CompletionSource("recv_pool", batch=1),
+                ]
+            ),
+            ndevices=1,
+        )
 
     # -- sending --------------------------------------------------------------
     def _send_impl(self, dest: int, parcel: Parcel, cb: Optional[SendCallback]) -> None:
@@ -111,6 +134,7 @@ class MPIParcelport(Parcelport):
             msgs.append((parcel.parcel_id, parcel.nzc_chunk.data))
         for c in parcel.zc_chunks:
             msgs.append((parcel.parcel_id, c.data))
+        self.engine.record("send", "rdv", len(msgs) - 1)
         op = _SendOp(dest, parcel, cb, msgs)
         req = self.mpi.isend(dest, TAG_HEADER, header)
         self.stats_sent += 1
@@ -132,23 +156,24 @@ class MPIParcelport(Parcelport):
         return True
 
     # -- receiving --------------------------------------------------------------
-    def _check_header(self) -> bool:
-        """Poll the single any-source header receive (try-lock: only one
-        thread proceeds; this is the paper's sequential bottleneck)."""
+    def _reap_header(self) -> Optional[bytes]:
+        """Test the single any-source header receive (try-lock: only one
+        thread proceeds; this is the paper's sequential bottleneck).  On
+        completion the next any-source receive is pre-posted *before* the
+        payload is handed back for dispatch."""
         if not self._header_lock.acquire(blocking=False):
-            return False
+            return None
         try:
             done, payload = self.mpi.test(self._header_req)
             if not done:
-                return False
-            # Pre-post the next any-source receive *before* processing.
+                return None
             self._header_req = self.mpi.irecv(ANY_SOURCE, TAG_HEADER)
+            return payload
         finally:
             self._header_lock.release()
-        self._process_header(payload)
-        return True
 
     def _process_header(self, payload: bytes) -> None:
+        self.engine.record("header", "rdv")
         h = decode_header(payload)
         op = _RecvOp(h.source, h)
         if h.piggybacked_nzc is not None and not h.zc_sizes:
@@ -164,6 +189,7 @@ class MPIParcelport(Parcelport):
         if not done:
             self._recv_pool.add(req, op)
             return False
+        self.engine.record("chunk")
         h = op.header
         if op.nzc is None:
             op.nzc = payload
@@ -200,13 +226,43 @@ class MPIParcelport(Parcelport):
         # the library's internal backlog counts as pending work too.
         return self.mpi.pending_post_count() > 0 or bool(self._retry_q)
 
-    # -- the worker entry point ---------------------------------------------
+    # ------------------------------------------- the progress-engine hookup
     def background_work(self) -> bool:
-        progressed = self._check_header()
-        item = self._send_pool.poll_one()
-        if item is not None:
-            progressed |= self._advance_send(*item)
-        item = self._recv_pool.poll_one()
-        if item is not None:
-            progressed |= self._advance_recv(*item)
-        return progressed
+        """One step of the SHARED progress engine; this parcelport supplies
+        only the op semantics (request-pool tests, header polling)."""
+        return run_step(self.engine, self, 0)
+
+    def execute(self, op: tuple) -> Any:
+        """Execute one engine op against MPISim's request-pool structures.
+
+        The engine's ``progress`` op maps to *nothing*: MPI advertises no
+        explicit progress verb (``capabilities.explicit_progress=False``) —
+        all progress rides inside the ``test`` calls the reaps perform,
+        which is exactly the §3.3.4 structure the paper critiques."""
+        kind = op[0]
+        if kind == "reap":
+            name = op[1].name
+            if name == "mpi_header":
+                return self._reap_header()
+            if name == "send_pool":
+                return self._send_pool.poll_one()
+            return self._recv_pool.poll_one()
+        if kind == "dispatch":
+            name, item = op[1].name, op[3]
+            if name == "mpi_header":
+                self._process_header(item)
+                return True
+            if name == "send_pool":
+                return self._advance_send(*item)
+            return self._advance_recv(*item)
+        if kind == "drain_retries":
+            # MPISim buffers refused posts internally (no EAGAIN surfaces),
+            # so the parcelport's retry queue is normally empty.
+            return self._drain_retries()
+        if kind == "step_trylock":
+            # the pool try-locks live inside _RequestPool.poll_one / the
+            # header lock — the step-level decision maps to "go ahead".
+            return True
+        # progress/poll/big_lock/implicit_tax/reap_*/flush: nothing to do
+        # at this layer (see docstring); the DES charges their costs.
+        return False

@@ -120,6 +120,11 @@ _FIXED = {
     "lci_agg_eager": lambda: LCIPPConfig(
         name="lci_agg_eager", aggregation=True, agg_eager=True, eager_threshold=16 * 1024
     ),
+    # Completion-routing topology (§3.3.3): ONE completion queue shared
+    # across devices — LCI's load-balancing default, named so the
+    # CompletionRouter axis is sweepable against per-device queues
+    # (`.variant(cq_scope='device')`).
+    "lci_shared_cq": lambda: LCIPPConfig(name="lci_shared_cq", cq_scope="shared"),
 }
 for _name, _build in _FIXED.items():
     REGISTRY.register(_name, _build)
@@ -144,6 +149,22 @@ REGISTRY.register_family(VariantSpec(
     build=lambda name, k: LCIPPConfig(name=name, eager_threshold=k * 1024),
     canonical=((16,), (64,)),
     doc="eager protocol up to {k} KiB",
+))
+# progress-policy family (§3.3.4, the paper's omitted experiment): n cores
+# reserved to ONLY drive the progress engine (ROLE_PROGRESS threads in the
+# functional layer, reserved DES workers in the simulator).  n=0 is the
+# all-workers-poll baseline (explicit progress on every worker, plain lci);
+# n>0 task workers drop to implicit polling — the dedicated workers own the
+# eager progress, matching how such runtimes are actually deployed.
+REGISTRY.register_family(VariantSpec(
+    grammar="lci_prg{n}",
+    build=lambda name, n: LCIPPConfig(
+        name=name,
+        progress_workers=n,
+        progress_mode="explicit" if n == 0 else "implicit",
+    ),
+    canonical=((0,), (2,)),
+    doc="dedicated progress workers: {n} reserved cores drive the engine (0 = all workers poll)",
 ))
 # bounded-injection family (§3.3.4, ROADMAP follow-up): finite send ring +
 # bounce pool, both `depth` deep, through the shared resource model.

@@ -1,0 +1,343 @@
+"""ONE progress engine across the functional core and the DES (ISSUE 4).
+
+The engine-parity suite: both layers drive the same
+:class:`repro.core.comm.progress.ProgressEngine`, so — given the same
+variant config and workload — they must make IDENTICAL protocol-path and
+completion-dispatch decisions.  The engine records a normalized decision
+trace (``('send', path, nfollowups)``, ``('header', path)``,
+``('chunk',)``, ``('deliver', n)``); we compare the ordered traces.
+
+Plus: policy/router units, the dedicated-progress-worker family
+(``lci_prg{n}``), the completion-router scope (``cq_scope`` /
+``lci_shared_cq``), the ``rnr_storm`` model, and the
+``sim_config_for_variant`` family-resolution regression."""
+import dataclasses
+
+import pytest
+
+from repro.amtsim.parcelport_sim import (
+    SHARED_CONFIG_FIELDS,
+    SimConfig,
+    SimWorld,
+    Task,
+    sim_config_for_variant,
+)
+from repro.amtsim.workloads import flood
+from repro.core.comm.progress import (
+    LOCK_BLOCK,
+    LOCK_TRY,
+    ROLE_PROGRESS,
+    CompletionRouter,
+    CompletionSource,
+    ProgressEngine,
+    ProgressPolicy,
+    run_step,
+)
+from repro.core.comm.resources import ResourceLimits
+from repro.core.lci_parcelport import LCIPPConfig, LCIParcelport
+from repro.core.mpi_parcelport import MPIParcelport
+from repro.core.parcelport import World
+from repro.core.variants import VARIANTS, make_parcelport_factory, max_devices
+
+# Sizes chosen away from every threshold so both layers' size accounting
+# (the functional layer counts serialized bytes, the DES raw payload
+# bytes) lands on the same protocol path: 64 B (eager / piggyback),
+# 12 KiB (straddles nothing: rdv for 8 KiB thresholds, eager for 16 KiB),
+# 40 KiB (rendezvous with exactly one follow-up everywhere).
+PARITY_SIZES = (64, 12_000, 40_000)
+PARITY_VARIANTS = ("lci", "lci_agg_eager", "mpi", "lci_prg2")
+
+
+def functional_trace(variant: str, sizes=PARITY_SIZES) -> list:
+    """Run the functional core sequentially (drain between sends) and
+    return the engine's ordered decision trace."""
+    world = World(2, make_parcelport_factory(variant), devices_per_rank=max_devices(variant))
+    tr: list = []
+    for loc in world.localities:
+        loc.parcelport.engine.trace = tr
+    got: list = []
+    world.localities[1].register_action("sink", lambda *a: got.append(a))
+    for s in sizes:
+        world.localities[0].async_action(
+            1, "sink", bytes([s % 251]) * s, zero_copy_threshold=1 << 30
+        )
+        world.drain()
+    assert len(got) == len(sizes)
+    for loc in world.localities:
+        close = getattr(loc.parcelport, "close", None)
+        if close:
+            close()
+    return tr
+
+
+def des_trace(variant: str, sizes=PARITY_SIZES) -> list:
+    """Run the DES with the same config, chained sequentially (each send
+    spawned by the previous delivery), and return the engine's trace."""
+    world = SimWorld(2, 4, sim_config_for_variant(variant))
+    tr: list = []
+    world.engine.trace = tr
+    state = {"i": 0}
+
+    def send_next() -> None:
+        if state["i"] >= len(sizes):
+            world.stop()
+            return
+        size = sizes[state["i"]]
+        state["i"] += 1
+        op = world.make_parcel(0, 1, size, on_delivered=send_next)
+        world.spawn(0, Task(action=lambda w, _op=op: world.send_parcel(w, _op)))
+
+    send_next()
+    world.run(until=5.0)
+    assert world.stopped and state["i"] == len(sizes)
+    return tr
+
+
+# ------------------------------------------------------- engine parity
+@pytest.mark.parametrize("variant", PARITY_VARIANTS)
+def test_engine_parity_functional_vs_des(variant):
+    """The acceptance gate: same variant, same workload → the functional
+    core and the DES replay identical ordered decision traces through the
+    one shared engine (protocol path per send, header kind, follow-up
+    chunk sequence, delivery counts)."""
+    ft = functional_trace(variant)
+    dt = des_trace(variant)
+    assert ft == dt, f"{variant}: functional {ft} != DES {dt}"
+
+
+def test_parity_trace_shape():
+    """The trace itself encodes the protocol engine: eager sends have zero
+    follow-ups and eager headers; 40 KiB rides rendezvous with exactly one
+    chunk; every parcel delivers exactly once."""
+    tr = functional_trace("lci")
+    sends = [e for e in tr if e[0] == "send"]
+    assert sends[0] == ("send", "eager", 0)  # 64 B
+    assert sends[1] == ("send", "rdv", 1)  # 12 KiB > 8 KiB piggyback
+    assert sends[2] == ("send", "rdv", 1)  # 40 KiB
+    assert tr.count(("deliver", 1)) == len(PARITY_SIZES)
+    assert tr.count(("chunk",)) == 2
+    # agg_eager's 16 KiB threshold flips the 12 KiB parcel onto eager
+    tr_agg = functional_trace("lci_agg_eager")
+    assert [e for e in tr_agg if e[0] == "send"][1] == ("send", "eager", 0)
+    # MPI never takes the eager path
+    assert all(e[1] == "rdv" for e in functional_trace("mpi") if e[0] == "send")
+
+
+# ------------------------------------------------- policy / router units
+def test_policy_for_config_parity_across_layers():
+    """ONE policy builder serves both layers: the functional LCIPPConfig
+    and the DES SimConfig for the same variant yield the same policy."""
+    for name in ("lci", "try_progress", "block", "lci_prg2"):
+        functional = ProgressPolicy.for_config(VARIANTS[name])
+        des = ProgressPolicy.for_config(sim_config_for_variant(name))
+        assert functional == des, name
+    assert ProgressPolicy.for_config(sim_config_for_variant("mpi")) == ProgressPolicy.mpi_request_pool()
+
+
+def test_named_policies_match_paper_ladder():
+    assert ProgressPolicy.blocking().lock_mode == LOCK_BLOCK
+    assert ProgressPolicy.blocking().progress_mode == "explicit"  # §5.3 catastrophe
+    assert ProgressPolicy.explicit_trylock().lock_mode == LOCK_TRY
+    assert ProgressPolicy.worker_polling().progress_mode == "implicit"
+    assert ProgressPolicy.dedicated(3).dedicated_workers == 3
+    mpi = ProgressPolicy.mpi_request_pool()
+    assert mpi.step_lock and mpi.big_lock
+
+
+def test_router_device_rotation_and_roles():
+    src_own = CompletionSource("dev_cq", per_device=True, sweep="own", progress_side=True)
+    src_all = CompletionSource("cq", per_device=True, sweep="all")
+    client = CompletionSource("client_poll")
+    router = CompletionRouter([client, src_own, src_all], ndevices=4)
+    # task role: own-device sources stay on the static mapping; 'all'
+    # sources rotate starting at the worker's own device
+    assert router.devices_for(src_own, wid=6, role="task") == (2,)
+    assert router.devices_for(src_all, wid=6, role="task") == (2, 3, 0, 1)
+    assert router.devices_for(client, wid=6, role="task") == (-1,)
+    # progress role: only progress-side sources, every device
+    assert router.sources(ROLE_PROGRESS) == (src_own,)
+    assert router.devices_for(src_own, wid=1, role=ROLE_PROGRESS) == (1, 2, 3, 0)
+
+
+class _OpLog:
+    """Fake op executor: records the engine's decision sequence."""
+
+    def __init__(self, results=None):
+        self.ops = []
+        self.results = dict(results or {})
+
+    def execute(self, op):
+        self.ops.append(op[0])
+        return self.results.get(op[0])  # None = empty reap / falsy op result
+
+
+def test_engine_step_canonical_order():
+    eng = ProgressEngine(
+        ProgressPolicy(),  # explicit, lock-free
+        CompletionRouter([CompletionSource("cq", batch=4)], ndevices=1),
+    )
+    log = _OpLog()
+    run_step(eng, log, wid=0)
+    # drain retries → progress → reap (empty) → flush
+    assert log.ops == ["drain_retries", "progress", "reap_begin", "reap", "reap_end", "flush"]
+
+
+def test_engine_step_mpi_discipline_aborts_on_contended_pool():
+    eng = ProgressEngine(
+        ProgressPolicy.mpi_request_pool(),
+        CompletionRouter([CompletionSource("mpi_header", batch=1)]),
+    )
+    log = _OpLog(results={"step_trylock": False})
+    assert run_step(eng, log, wid=0) is False
+    assert log.ops == ["step_trylock"]  # nothing runs without the pool lock
+
+
+def test_engine_implicit_polls_only_on_empty_reap():
+    eng = ProgressEngine(
+        ProgressPolicy.worker_polling(),
+        CompletionRouter([CompletionSource("cq", batch=2)]),
+    )
+    idle = _OpLog()
+    run_step(eng, idle, wid=0)
+    assert "poll" in idle.ops and "implicit_tax" in idle.ops and "progress" not in idle.ops
+    busy = _OpLog(results={"reap": object()})
+    run_step(eng, busy, wid=0)
+    assert "poll" not in busy.ops  # something was reaped: no fallback poll
+
+
+# --------------------------------------- dedicated progress workers (prg)
+def test_lci_prg_family_resolves_and_delivers():
+    cfg = VARIANTS["lci_prg2"]
+    assert cfg.progress_workers == 2 and cfg.progress_mode == "implicit"
+    assert VARIANTS["lci_prg0"].progress_workers == 0
+    assert VARIANTS["lci_prg0"].progress_mode == "explicit"  # all-workers-poll
+    tr = functional_trace("lci_prg2")  # real dedicated threads + delivery
+    assert tr.count(("deliver", 1)) == len(PARITY_SIZES)
+
+
+def test_des_dedicated_progress_workers_deliver():
+    r = flood("lci_prg2", msg_size=64, nthreads=8, nmsgs=300)
+    assert r.messages == 300
+
+
+def test_des_rejects_all_workers_dedicated():
+    """Reserving every core for the engine leaves nobody to run tasks —
+    fail fast instead of silently spinning to the time cap."""
+    with pytest.raises(ValueError, match="progress_workers"):
+        SimWorld(2, 2, sim_config_for_variant("lci_prg2"))
+
+
+# --------------------------------------------- completion-router scope
+def test_cq_scope_device_functional_delivery():
+    cfg = VARIANTS["lci_shared_cq"].variant(name="lci_devcq", cq_scope="device")
+    world = World(2, lambda loc, fab: LCIParcelport(loc, fab, cfg), devices_per_rank=cfg.ndevices)
+    got: list = []
+    for loc in world.localities:
+        loc.register_action("sink", lambda *a, _g=got: _g.append(a))
+    for i, s in enumerate((8, 600, 12_000, 40_000)):
+        world.localities[i % 2].async_action((i + 1) % 2, "sink", b"x" * s)
+    world.drain()
+    assert sorted(len(a[0]) for a in got) == [8, 600, 12_000, 40_000]
+    # the shared-scope variant is the documented default
+    assert VARIANTS["lci_shared_cq"].cq_scope == "shared"
+    assert VARIANTS["lci"].cq_scope == "shared"
+
+
+def test_cq_scope_device_des_deterministic():
+    cfg = dataclasses.replace(sim_config_for_variant("lci"), name="lci_devcq", cq_scope="device")
+    r1 = flood(cfg, msg_size=8, nthreads=8, nmsgs=300)
+    r2 = flood(cfg, msg_size=8, nthreads=8, nmsgs=300)
+    assert r1.messages == 300 and (r1.elapsed, r1.messages) == (r2.elapsed, r2.messages)
+
+
+# ------------------------------------------------------------ rnr_storm
+def _rnr_cfg(storm: bool) -> SimConfig:
+    return dataclasses.replace(
+        sim_config_for_variant("lci"),
+        name="lci_rnr_storm" if storm else "lci_rnr",
+        rnr_storm=storm,
+        limits=ResourceLimits(recv_slots=1),
+    )
+
+
+def test_rnr_storm_charges_retries_and_loses_nothing():
+    """ROADMAP follow-up (§3.1): storm mode retransmits RNR'd arrivals
+    under exponential backoff on t_rnr_retry — counted per retry, slower
+    than free redelivery-on-reap, and still lossless."""
+    free = flood(_rnr_cfg(False), msg_size=64, nthreads=8, nmsgs=300, max_seconds=4.0)
+    storm = flood(_rnr_cfg(True), msg_size=64, nthreads=8, nmsgs=300, max_seconds=4.0)
+    assert free.rnr_events > 0 and free.rnr_retries == 0  # default: free redelivery
+    assert storm.rnr_retries > 0  # every retransmission counted
+    assert storm.messages == 300  # retried, never lost
+    assert storm.elapsed > free.elapsed  # retries burn wire time
+    assert storm.rnr_events >= free.rnr_events  # refused retries re-count
+
+
+def test_rnr_storm_flag_is_inert_without_recv_slots():
+    """Unbounded model bit-identical: the storm flag takes no code path
+    unless limits.recv_slots bounds the receive side."""
+    base = sim_config_for_variant("lci")
+    r0 = flood(base, msg_size=64, nthreads=8, nmsgs=300)
+    r1 = flood(dataclasses.replace(base, rnr_storm=True), msg_size=64, nthreads=8, nmsgs=300)
+    assert (r0.elapsed, r0.messages, r0.rnr_events, r0.rnr_retries) == (
+        r1.elapsed, r1.messages, r1.rnr_events, r1.rnr_retries,
+    )
+
+
+def test_rnr_storm_deterministic():
+    cfg = _rnr_cfg(True)
+    r1 = flood(cfg, msg_size=64, nthreads=8, nmsgs=300, max_seconds=4.0)
+    r2 = flood(cfg, msg_size=64, nthreads=8, nmsgs=300, max_seconds=4.0)
+    assert (r1.elapsed, r1.rnr_retries) == (r2.elapsed, r2.rnr_retries)
+
+
+def test_rnr_retries_in_injection_stats():
+    cfg = _rnr_cfg(True)
+    world = SimWorld(2, 4, cfg)
+    assert "rnr_retries" in world.injection_stats()
+
+
+# ---------------------------------- sim_config_for_variant (regression)
+def test_sim_config_resolves_family_members_via_registry():
+    """The fix: parameterized family names resolve through the registry,
+    and every shared axis is carried over — not just the fixed names."""
+    prg = sim_config_for_variant("lci_prg2")
+    assert prg.progress_workers == 2 and prg.progress_mode == "implicit"
+    b8 = sim_config_for_variant("lci_b8")
+    assert b8.limits is VARIANTS["lci_b8"].limits  # SAME object, never a copy
+    eager = sim_config_for_variant("lci_eager_32k")
+    assert eager.eager_threshold == 32 * 1024
+    with pytest.raises(KeyError):
+        sim_config_for_variant("lci_prgx")
+
+
+def test_shared_config_fields_exhaustive():
+    """Drift guard: every LCIPPConfig axis except the name must be mapped
+    into SimConfig (a new functional knob that the DES silently ignores is
+    exactly the bug the one-engine refactor exists to prevent)."""
+    lci_fields = {f.name for f in dataclasses.fields(LCIPPConfig)} - {"name"}
+    assert lci_fields == set(SHARED_CONFIG_FIELDS)
+    sim_fields = {f.name for f in dataclasses.fields(SimConfig)}
+    assert set(SHARED_CONFIG_FIELDS) <= sim_fields
+
+
+# ------------------------------------------------- the check_api gate
+def test_background_work_is_engine_thin():
+    """Both functional parcelports' background_work must be thin run_step
+    calls (the tools/check_api.py CI gate, asserted here as a test)."""
+    for cls in (LCIParcelport, MPIParcelport):
+        assert "run_step" in cls.background_work.__code__.co_names
+
+
+def test_check_api_engine_gate_green():
+    import importlib.util
+    from pathlib import Path
+
+    spec = importlib.util.spec_from_file_location(
+        "check_api", Path(__file__).resolve().parent.parent / "tools" / "check_api.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    failures: list = []
+    mod.check_progress_engine(failures)
+    assert failures == []

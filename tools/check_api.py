@@ -19,6 +19,21 @@ ever re-grows:
 3. **Delegates stay wired** — the legacy ``SimConfig.send_queue_depth``
    etc. read through to ``limits``.
 
+Since PR 4 the gate also protects the second shared component: **ONE
+progress engine** (``repro.core.comm.progress.ProgressEngine``).  Before
+it, the completion-reap loop existed three times (LCI parcelport, MPI
+parcelport, ~270 duplicated DES lines) — exactly the drift this gate now
+fails on if it re-grows:
+
+4. **No private reap loops** — ``poll_cq`` (the raw hardware reap verb)
+   may appear only in the fabric (its definition) and the LCI device (the
+   ``CommInterface`` progress verb); both functional parcelports'
+   ``background_work`` must be thin ``run_step`` calls into the engine;
+   the DES must not re-grow backend-specific background-work generators
+   (``_lci_background_work`` / ``_mpi_background_work`` /
+   ``_progress_device``), and ``_handle_completion`` may be called only
+   from the engine's op driver.
+
 Exit code is nonzero on any failure; failures are listed one per line.
 """
 from __future__ import annotations
@@ -90,9 +105,78 @@ def check_api(failures: list) -> None:
         failures.append("LCIPPConfig.retry_budget does not delegate to limits.retry_budget")
 
 
+def check_progress_engine(failures: list) -> None:
+    """Gate 4: completions are reaped and dispatched ONLY by the shared
+    ProgressEngine and its op adapters (no re-grown private loops)."""
+    src = REPO / "src" / "repro"
+    core = src / "core"
+    # 4a. poll_cq stays behind the CommInterface progress verb (match the
+    # call syntax on code lines, not mentions in comments/docstrings)
+    allowed_poll_cq = {core / "fabric.py", core / "device.py"}
+    for path in sorted(src.rglob("*.py")):
+        if path in allowed_poll_cq:
+            continue
+        if any(
+            ".poll_cq(" in line
+            for line in path.read_text().splitlines()
+            if not line.lstrip().startswith("#")
+        ):
+            failures.append(
+                f"{path.relative_to(REPO)}: calls poll_cq — the hardware reap "
+                "verb belongs to the engine's backend adapters only"
+            )
+    # 4b. both functional parcelports drive the ONE engine
+    sys.path.insert(0, str(REPO / "src"))
+    try:
+        from repro.core.lci_parcelport import LCIParcelport
+        from repro.core.mpi_parcelport import MPIParcelport
+    except Exception as exc:  # pragma: no cover - environment-dependent
+        failures.append(f"import failed: {exc}")
+        return
+    for cls in (LCIParcelport, MPIParcelport):
+        if "run_step" not in cls.background_work.__code__.co_names:
+            failures.append(
+                f"{cls.__name__}.background_work does not call the shared engine "
+                "(run_step) — private progress loop re-grown?"
+            )
+    for fname in ("lci_parcelport.py", "mpi_parcelport.py"):
+        text = (core / fname).read_text()
+        if "ProgressEngine" not in text:
+            failures.append(f"src/repro/core/{fname}: does not import the shared ProgressEngine")
+        if ".drain(" in text:
+            failures.append(
+                f"src/repro/core/{fname}: drains a completion queue directly — "
+                "reaping belongs to the engine's reap op"
+            )
+    # 4c. the DES has no backend-specific background-work generators
+    sim_path = src / "amtsim" / "parcelport_sim.py"
+    sim = sim_path.read_text()
+    if "ProgressEngine" not in sim:
+        failures.append("parcelport_sim.py does not import the shared ProgressEngine")
+    for forbidden in ("_lci_background_work", "_mpi_background_work", "_progress_device"):
+        if forbidden in sim:
+            failures.append(
+                f"parcelport_sim.py re-grew {forbidden} — the DES must drive the "
+                "shared engine, not duplicate its loop"
+            )
+    # def _handle_completion + exactly one call site (the engine driver);
+    # comment lines don't count — the gate polices code, not documentation
+    n_handle = sum(
+        line.count("_handle_completion(")
+        for line in sim.splitlines()
+        if not line.lstrip().startswith("#")
+    )
+    if n_handle > 2:
+        failures.append(
+            f"parcelport_sim.py calls _handle_completion from {n_handle - 1} sites — "
+            "dispatch-by-kind belongs to the engine driver alone"
+        )
+
+
 def main() -> int:
     failures: list = []
     check_api(failures)
+    check_progress_engine(failures)
     for f in failures:
         print(f"FAIL: {f}")
     print(f"check_api: {len(failures)} failure(s)")
