@@ -59,15 +59,18 @@ SMOKE_DES_VARIANTS = ("lci", "lci_eager_64k", "lci_noeager", "lci_agg_eager", "m
 
 def _smoke_core_variant(name: str, fabric_kwargs=None) -> dict:
     """Deliver mixed-size parcels on one variant; bounded drain raises on
-    deadlock/quiesce failure, which the caller records as a regression."""
-    from repro.core.harness import deliver_payloads
+    deadlock/quiesce failure, which the caller records as a regression.
+    Stats come from whichever transport carried the bytes (the fabric, or
+    the collective group for the ``collective*`` variants)."""
+    from repro.core.harness import deliver_payloads, transport_stats
 
     payloads = [bytes([s % 251]) * s for s in SMOKE_PAYLOAD_SIZES]
     world, got = deliver_payloads(name, payloads, fabric_kwargs=fabric_kwargs, max_rounds=50_000)
     delivered = sorted(len(a[0]) for a in got)
+    world.close()  # join any dedicated progress threads (lci_prg{n})
     if delivered != sorted(len(p) for p in payloads):
         raise RuntimeError(f"{name}: delivered {delivered}, expected {sorted(SMOKE_PAYLOAD_SIZES)}")
-    st = world.fabric.stats
+    st = transport_stats(world)
     return {
         "messages": st.messages,
         "eager_msgs": st.eager_msgs,
@@ -210,6 +213,55 @@ def smoke() -> int:
     except Exception as exc:  # noqa: BLE001
         traceback.print_exc()
         failures.append(f"progress_contention: {exc}")
+
+    # 8. the collective parity pair: the JAX-collectives backend must
+    # replay the LCI backend's engine decision trace bit for bit on the
+    # same two-sided config (same protocol, different transport), match
+    # its message count, and a bounded collective hand-off must
+    # backpressure AND deliver
+    try:
+        from repro.core.comm.resources import ResourceLimits
+        from repro.core.harness import deliver_payloads, transport_stats
+        from repro.core.parcelport import World
+        from repro.core.variants import make_parcelport_factory, max_devices
+
+        traces = {}
+        for name in ("sendrecv_queue", "collective"):
+            world = World(2, make_parcelport_factory(name), devices_per_rank=max_devices(name))
+            tr: list = []
+            for loc in world.localities:
+                loc.parcelport.engine.trace = tr
+            got: list = []
+            world.localities[1].register_action("sink", lambda *a, _g=got: _g.append(a))
+            for s in SMOKE_PAYLOAD_SIZES:
+                world.localities[0].async_action(1, "sink", bytes([s % 251]) * s)
+                world.drain(max_rounds=50_000)
+            if len(got) != len(SMOKE_PAYLOAD_SIZES):
+                raise RuntimeError(f"{name}: delivered {len(got)}/{len(SMOKE_PAYLOAD_SIZES)}")
+            traces[name] = (tr, transport_stats(world).messages)
+        if traces["collective"][0] != traces["sendrecv_queue"][0]:
+            raise RuntimeError("collective/lci engine decision traces diverged")
+        if traces["collective"][1] != traces["sendrecv_queue"][1]:
+            raise RuntimeError(
+                f"collective used {traces['collective'][1]} msgs, lci {traces['sendrecv_queue'][1]}"
+            )
+        bounded_coll = _smoke_core_variant(
+            "collective",
+            fabric_kwargs=dict(limits=ResourceLimits(send_queue_depth=2, bounce_buffers=2,
+                                                     bounce_buffer_size=65_536)),
+        )
+        if bounded_coll["backpressure_events"] <= 0:
+            raise RuntimeError("bounded collective hand-off produced no backpressure")
+        results["collective_pair"] = {
+            "trace_len": len(traces["collective"][0]),
+            "messages": traces["collective"][1],
+            "bounded_backpressure_events": bounded_coll["backpressure_events"],
+        }
+        print(f"smoke collective==lci trace parity ok  ({len(traces['collective'][0])} decisions, "
+              f"{bounded_coll['backpressure_events']} bounded backpressure events)")
+    except Exception as exc:  # noqa: BLE001
+        traceback.print_exc()
+        failures.append(f"collective_pair: {exc}")
 
     results["failures"] = failures
     results["elapsed"] = time.time() - t0

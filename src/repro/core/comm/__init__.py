@@ -17,6 +17,7 @@ proposal arXiv 2503.15400):
   keep this package a leaf for the modules below it.
 """
 from .base import (
+    InjectionThrottle,
     ParcelportBase,
     aggregate_parcels,
     aggregate_projected_bytes,
@@ -45,6 +46,11 @@ __all__ = [
     "VariantSpec",
     "RegistryView",
     "UnknownVariantError",
+    "CollectiveComm",
+    "CollectiveGroup",
+    "CollectiveParcelport",
+    "CommChannel",
+    "InjectionThrottle",
     "aggregate_parcels",
     "aggregate_projected_bytes",
     "complete",
@@ -53,13 +59,20 @@ __all__ = [
 ]
 
 _REGISTRY_NAMES = {"VariantRegistry", "VariantSpec", "RegistryView", "UnknownVariantError"}
+_COLLECTIVE_NAMES = {"CollectiveComm", "CollectiveGroup", "CollectiveParcelport", "CommChannel"}
 
 
 def __getattr__(name: str):
-    # Lazy: registry is pure machinery, but importing it eagerly would make
-    # every `from .comm.base import ...` in lower layers pay for it.
+    # Lazy: registry is pure machinery, and the collective backend imports
+    # the parcelport layer above this package — importing either eagerly
+    # would make every `from .comm.base import ...` in lower layers pay
+    # for it (or cycle).
     if name in _REGISTRY_NAMES:
         from . import registry
 
         return getattr(registry, name)
+    if name in _COLLECTIVE_NAMES:
+        from . import collective
+
+        return getattr(collective, name)
     raise AttributeError(name)

@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 from ..parcel import Chunk, Parcel, SendCallback
 
 __all__ = [
+    "InjectionThrottle",
     "ParcelportBase",
     "aggregate_parcels",
     "aggregate_projected_bytes",
@@ -118,6 +119,67 @@ def split_aggregate(parcel: Parcel) -> List[Parcel]:
     return out
 
 
+class InjectionThrottle:
+    """Park-and-retry machinery for backpressured comm-interface posts
+    (paper §3.3.4) — the sender-side throttle, shared verbatim by every
+    parcelport AND the serving stack's request/response channel: a post the
+    backend refused (falsy :class:`~repro.core.comm.interface.PostStatus`)
+    parks as a thunk and is retried under a bounded per-call budget,
+    stopping at the first refusal (the backend has not freed resources, so
+    the rest would fail too — throttle instead of hammering)."""
+
+    def __init__(self, retry_budget: int = 8):
+        self.retry_budget = retry_budget
+        self.parks = 0  # EAGAIN-parked posts (backpressure observability)
+        self._q: deque = deque()
+        # One lock serializes posting AND draining end to end: the FIFO
+        # non-overtaking guarantee below must hold even when one thread
+        # drains retries while another posts fresh work (e.g. the serve
+        # loop flushing a token batch during an executor worker's pump).
+        self._lock = threading.Lock()
+
+    def post_or_park(self, thunk: Callable[[], Any]) -> bool:
+        """Run a comm-interface post; if it EAGAINs, park it for retry.
+
+        Non-overtaking (FIFO): while parked posts exist, a fresh post
+        parks BEHIND them instead of attempting — otherwise a post issued
+        after the backend freed resources would bypass an earlier parked
+        one, reordering traffic the client issued in order (the serving
+        channel's token batches rely on this)."""
+        with self._lock:
+            if self._q:
+                self.parks += 1
+                self._q.append(thunk)
+                return False
+            if thunk():
+                return True
+            self.parks += 1
+            self._q.append(thunk)
+            return False
+
+    def drain(self) -> bool:
+        """Retry up to ``retry_budget`` parked posts, oldest first.  The
+        head stays queued until its retry succeeds, so a concurrent
+        ``post_or_park`` always observes it and parks behind."""
+        moved = False
+        with self._lock:
+            for _ in range(self.retry_budget):
+                if not self._q:
+                    break
+                if self._q[0]():
+                    self._q.popleft()
+                    moved = True
+                else:
+                    break
+        return moved
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)
+
+
 class ParcelportBase:
     """Library-agnostic parcelport core (one per communication library per
     locality).  See the module docstring for what is shared here."""
@@ -142,12 +204,10 @@ class ParcelportBase:
         self._agg_lock = threading.Lock()
         # Backpressured posts awaiting retry (sender-side throttle, §3.3.4).
         self.retry_budget = retry_budget
-        self._retry_q: deque = deque()
-        self._retry_lock = threading.Lock()
+        self._throttle = InjectionThrottle(retry_budget)
         self.stats_sent = 0
         self.stats_received = 0
         self.stats_agg_batches = 0  # threshold-aware drains that split
-        self.stats_backpressure_parks = 0
 
     # -- public API (paper Listing 2) ---------------------------------------
     def send(self, dest: int, parcel: Parcel, cb: Optional[SendCallback] = None) -> None:
@@ -208,34 +268,26 @@ class ParcelportBase:
         self._send_impl(dest, agg, agg_cb)
 
     # -- injection backpressure (paper §3.3.4) ------------------------------
+    @property
+    def stats_backpressure_parks(self) -> int:
+        return self._throttle.parks
+
+    @property
+    def _retry_q(self) -> deque:
+        """The parked-post deque (the throttle's queue, historical name)."""
+        return self._throttle._q
+
     def _post_or_park(self, thunk: Callable[[], Any]) -> None:
-        """Run a comm-interface post; if it EAGAINs, park it for retry."""
-        if thunk():
-            return
-        self.stats_backpressure_parks += 1
-        with self._retry_lock:
-            self._retry_q.append(thunk)
+        """Run a comm-interface post; if it EAGAINs, park it for retry
+        (delegates to the shared :class:`InjectionThrottle`)."""
+        self._throttle.post_or_park(thunk)
 
     def _drain_retries(self) -> bool:
-        """Retry up to ``retry_budget`` parked posts; stop at the first one
-        that still backpressures (the backend has not freed resources, so
-        the rest would fail too — throttle instead of hammering)."""
-        moved = False
-        for _ in range(self.retry_budget):
-            with self._retry_lock:
-                if not self._retry_q:
-                    return moved
-                thunk = self._retry_q.popleft()
-            if thunk():
-                moved = True
-            else:
-                with self._retry_lock:
-                    self._retry_q.appendleft(thunk)
-                return moved
-        return moved
+        """Retry parked posts under the bounded budget."""
+        return self._throttle.drain()
 
     def retry_queue_depth(self) -> int:
-        return len(self._retry_q)
+        return len(self._throttle)
 
     def background_work(self) -> bool:
         raise NotImplementedError
@@ -245,7 +297,7 @@ class ParcelportBase:
         ever surface on its own (e.g. backpressured posts parked for
         retry).  ``World.drain`` refuses to call a world quiescent while
         any parcelport reports pending work."""
-        return bool(self._retry_q)
+        return bool(self._throttle)
 
     # -- subclass hook --------------------------------------------------------
     def _send_impl(self, dest: int, parcel: Parcel, cb: Optional[SendCallback]) -> None:

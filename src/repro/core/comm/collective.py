@@ -1,0 +1,478 @@
+"""CollectiveComm — the :class:`CommInterface` backend over the JAX
+collectives layer (ISSUE 5, ROADMAP follow-up).
+
+The repo has had two communication stacks: the parcelport study (LCI/MPI
+backends over the in-process fabric) and the jax_pallas serving/training
+stack, whose request/response and gradient-sync hand-offs were ad-hoc
+in-memory queues.  This module closes the loop: the *same* five-verb
+contract the paper formalizes (§2.3, §3.3; companion proposal arXiv
+2503.15400) now also fronts the transport the serving stack rides — the
+JAX collectives layer used by :mod:`repro.train.grad_sync`,
+:mod:`repro.launch.serve`, and :mod:`repro.serve.server`.
+
+Pieces:
+
+* :class:`CollectiveGroup` — the transport: a set of ``(rank, device)``
+  endpoints exchanging byte messages.  The default **pure-python loopback**
+  stage keeps tier-1 runnable without multi-host devices; ``stage='jax'``
+  additionally round-trips every transmitted payload through a JAX device
+  buffer (``device_put``/``device_get``) — what an all-to-all over the
+  collectives layer degenerates to on one host.  One group per
+  :class:`~repro.core.fabric.Fabric` (see :func:`collective_group_for`),
+  drawing its bounds from the SAME shared
+  :class:`~repro.core.comm.resources.ResourceLimits`.
+* :class:`CollectiveComm` — one endpoint, a full backend: ``post_send`` /
+  ``post_recv`` with (src, tag) matching and an unexpected-message queue,
+  typed :class:`~repro.core.comm.interface.PostStatus` refusals
+  (``EAGAIN_QUEUE`` when the transit ring is full, ``EAGAIN_BUFFER`` when
+  the eager bounce accounting is exhausted), explicit ``progress`` /
+  ``poll``, and **honest capabilities**: the collectives layer has no
+  one-sided put-with-signal, so ``post_put_signal`` raises
+  :class:`~repro.core.comm.interface.UnsupportedCapabilityError` and the
+  parcelport above drops to the two-sided header path *by capability* —
+  exactly the §3.3 fallback the abstraction exists to make automatic.
+* :class:`CollectiveParcelport` — the LCI parcelport's protocol logic
+  (eager/rendezvous selection, aggregation, backpressure throttle, the
+  shared :class:`~repro.core.comm.progress.ProgressEngine`) over
+  CollectiveComm endpoints instead of LCI devices.  Registered as the
+  ``collective`` variant (plus the ``collective_prg{n}`` family).
+* :class:`CommChannel` — the serving stack's request/response hand-off:
+  a two-rank group, pre-posted tagged receives completing into shared
+  completion queues, and :class:`~repro.core.comm.base.InjectionThrottle`
+  parking on both sides.  :class:`repro.serve.server.InferenceServer`
+  drives it through the shared engine.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+from .base import InjectionThrottle
+from .interface import (
+    Capabilities,
+    CompletionTarget,
+    PostStatus,
+    UnsupportedCapabilityError,
+    complete,
+)
+from .progress import CompletionRouter, CompletionSource
+from .resources import ResourceLimits
+
+__all__ = [
+    "CollectiveGroup",
+    "CollectiveComm",
+    "CollectiveParcelport",
+    "CommChannel",
+    "collective_group_for",
+    "TAG_REQUEST",
+    "TAG_RESPONSE",
+    "FRAME_OVERHEAD",
+]
+
+# Per-message framing overhead (the tag word): THE LCI device's wire
+# overhead, imported rather than restated, so eager-capacity arithmetic —
+# and therefore the engine's protocol decisions — cannot drift between
+# backends.
+from ..device import WIRE_OVERHEAD as FRAME_OVERHEAD  # noqa: E402
+
+TAG_REQUEST = 1  # serving hand-off: client -> server request bytes
+TAG_RESPONSE = 2  # serving hand-off: server -> client token batches
+
+
+class _Transit:
+    """One posted-but-not-yet-exchanged message in an endpoint's ring."""
+
+    __slots__ = ("dst_rank", "dst_dev", "tag", "data", "comp", "ctx", "eager", "bounce")
+
+    def __init__(self, dst_rank, dst_dev, tag, data, comp, ctx, eager, bounce):
+        self.dst_rank = dst_rank
+        self.dst_dev = dst_dev
+        self.tag = tag
+        self.data = data
+        self.comp = comp
+        self.ctx = ctx
+        self.eager = eager
+        self.bounce = bounce  # True when the post claimed a bounce buffer
+
+
+class _Record:
+    """What the backend hands back to its client — same duck type as
+    :class:`repro.core.device.CompletionRecord` so the parcelport's
+    dispatch-by-kind works unchanged across backends."""
+
+    __slots__ = ("op", "tag", "src_rank", "src_dev", "data", "ctx")
+
+    def __init__(self, op, tag=-1, src_rank=-1, src_dev=-1, data=None, ctx=None):
+        self.op = op
+        self.tag = tag
+        self.src_rank = src_rank
+        self.src_dev = src_dev
+        self.data = data
+        self.ctx = ctx
+
+
+class _PostedRecv:
+    __slots__ = ("comp", "ctx")
+
+    def __init__(self, comp: Any, ctx: Any):
+        self.comp = comp
+        self.ctx = ctx
+
+
+class CollectiveGroup:
+    """The collectives transport: ``n_ranks × devices_per_rank`` endpoints.
+
+    Injection bounds come from one shared :class:`ResourceLimits` (the
+    same object the fabric and the DES consume); stats use the fabric's
+    :class:`~repro.core.fabric.FabricStats` shape so benchmark code reads
+    either transport through one accessor."""
+
+    def __init__(
+        self,
+        n_ranks: int,
+        devices_per_rank: int = 1,
+        limits: Optional[ResourceLimits] = None,
+        stage: str = "loopback",
+    ):
+        assert stage in ("loopback", "jax"), stage
+        from ..fabric import FabricStats  # stats shape shared with the fabric
+
+        self.n_ranks = n_ranks
+        self.devices_per_rank = max(1, devices_per_rank)
+        self.limits = limits or ResourceLimits()
+        self.stage = stage
+        self.stats = FabricStats()
+        # Endpoints on different ranks share these counters, and the
+        # collective_prg{n} family sweeps them from real threads — every
+        # update takes this lock (the fabric guards its stats likewise).
+        self._stats_lock = threading.Lock()
+        self._endpoints: Dict[Tuple[int, int], CollectiveComm] = {}
+        for r in range(n_ranks):
+            for d in range(self.devices_per_rank):
+                self._endpoints[(r, d)] = CollectiveComm(self, r, d)
+
+    def endpoint(self, rank: int, dev: int = 0) -> "CollectiveComm":
+        return self._endpoints[(rank, dev)]
+
+    def _stage_payload(self, data: bytes) -> bytes:
+        """Move one payload through the configured stage.  ``'jax'`` rides
+        the accelerator runtime: host → device buffer → host, the one-host
+        degenerate form of an all-to-all over the collectives layer."""
+        if self.stage == "loopback":
+            return data
+        import jax
+        import numpy as np
+
+        arr = jax.device_put(np.frombuffer(data, dtype=np.uint8))
+        return np.asarray(jax.device_get(arr)).tobytes()
+
+
+def collective_group_for(fabric: Any, devices_per_rank: int = 1, stage: str = "loopback") -> CollectiveGroup:
+    """The one :class:`CollectiveGroup` of a world, keyed on its fabric —
+    every locality's parcelport joins the same group, and the group draws
+    its bounds from ``fabric.limits`` (the shared resource model), so
+    ``lci_b{depth}``-style limits bind the collective transport too."""
+    group = getattr(fabric, "_collective_group", None)
+    if group is None:
+        group = CollectiveGroup(
+            fabric.n_ranks, devices_per_rank=devices_per_rank, limits=fabric.limits, stage=stage
+        )
+        fabric._collective_group = group
+    return group
+
+
+class CollectiveComm:
+    """One endpoint of the collectives transport — a full five-verb
+    :class:`~repro.core.comm.interface.CommInterface` backend.
+
+    A post claims a transit-ring slot (``EAGAIN_QUEUE`` when
+    ``limits.send_queue_depth`` is exhausted) and, for eager messages, one
+    unit of the bounce accounting (``EAGAIN_BUFFER``); both free when the
+    endpoint's own :meth:`progress` exchanges the message — a rank that
+    stops progressing throttles its own injection, like real hardware.
+    Receive matching mirrors the LCI device: posted (src, tag) queues,
+    any-source queues, and an unexpected-message queue for arrivals that
+    beat their receive."""
+
+    def __init__(self, group: CollectiveGroup, rank: int, dev_index: int):
+        self.group = group
+        self.rank = rank
+        self.dev_index = dev_index
+        self._send_lock = threading.Lock()
+        self._outbox: deque = deque()  # transit ring (posted, unexchanged)
+        self._inflight = 0  # occupied ring slots
+        self._bounce_free = group.limits.bounce_buffers
+        self._inbox: deque = deque()  # arrived (src_rank, tag, payload)
+        self._inbox_lock = threading.Lock()
+        self._match_lock = threading.Lock()
+        self._posted: Dict[Tuple[int, int], deque] = {}  # (src, tag)
+        self._posted_any: Dict[int, deque] = {}  # tag (any-source)
+        self._unexpected: Dict[Tuple[int, int], deque] = {}
+        self.progress_calls = 0
+
+    @property
+    def capabilities(self) -> Capabilities:
+        """Honest capabilities: the collectives layer offers no one-sided
+        put-with-signal; completions queue, progress is explicit, and
+        EAGAIN is surfaced whenever the shared limits bound injection."""
+        return Capabilities(
+            one_sided_put=False,
+            queue_completion=True,
+            explicit_progress=True,
+            bounded_injection=self.group.limits.bounded,
+        )
+
+    def eager_capacity(self) -> Optional[int]:
+        """Largest eager message this endpoint can inject (None = no
+        bounce accounting = unlimited) — same contract as the LCI device."""
+        lim = self.group.limits
+        return lim.bounce_buffer_size if lim.bounce_buffers > 0 else None
+
+    # ------------------------------------------------------------------ posts
+    def post_send(
+        self, dst_rank: int, dst_dev: int, tag: int, data: bytes,
+        comp: CompletionTarget, ctx: Any = None, eager: bool = False,
+    ) -> PostStatus:
+        """Nonblocking tagged send; ``comp`` completes locally once the
+        message is exchanged.  Typed EAGAIN on a full transit ring or an
+        exhausted eager bounce accounting."""
+        lim = self.group.limits
+        size = len(data) + FRAME_OVERHEAD
+        with self._send_lock:
+            if lim.send_queue_depth and self._inflight >= lim.send_queue_depth:
+                with self.group._stats_lock:
+                    self.group.stats.backpressure_events += 1
+                return PostStatus.EAGAIN_QUEUE
+            bounce = False
+            if eager and lim.bounce_buffers > 0:
+                if self._bounce_free <= 0 or size > lim.bounce_buffer_size:
+                    with self.group._stats_lock:
+                        self.group.stats.backpressure_events += 1
+                    return PostStatus.EAGAIN_BUFFER
+                self._bounce_free -= 1
+                bounce = True
+            self._inflight += 1
+            self._outbox.append(
+                _Transit(dst_rank, dst_dev, tag, bytes(data), comp, ctx, eager, bounce)
+            )
+        return PostStatus.OK
+
+    def post_recv(self, src_rank: int, tag: int, comp: CompletionTarget, ctx: Any = None) -> None:
+        """Pre-post a tagged receive (``src_rank`` may be -1 = any source).
+        Delivery of an already-arrived (unexpected) message happens OUTSIDE
+        the matching lock: ``signal`` is an arbitrary client callback and
+        may legally post another receive on this endpoint."""
+        pr = _PostedRecv(comp, ctx)
+        matched = None
+        with self._match_lock:
+            if src_rank >= 0:
+                uq = self._unexpected.get((src_rank, tag))
+                if uq:
+                    matched = uq.popleft()
+            else:
+                for (s, t), uq in self._unexpected.items():
+                    if t == tag and uq:
+                        matched = uq.popleft()
+                        break
+            if matched is None:
+                if src_rank >= 0:
+                    self._posted.setdefault((src_rank, tag), deque()).append(pr)
+                else:
+                    self._posted_any.setdefault(tag, deque()).append(pr)
+        if matched is not None:
+            src, data = matched
+            self._deliver_recv(pr, src, tag, data)
+
+    def post_put_signal(
+        self, dst_rank: int, dst_dev: int, data: bytes,
+        comp: CompletionTarget, ctx: Any = None, eager: bool = False,
+    ) -> PostStatus:
+        raise UnsupportedCapabilityError(
+            "the JAX collectives layer has no one-sided put-with-signal "
+            "(capabilities.one_sided_put=False) — use the two-sided path"
+        )
+
+    # --------------------------------------------------------------- progress
+    def progress(self, max_completions: int = 16) -> bool:
+        """Explicitly drive the transport: exchange up to
+        ``max_completions`` of this endpoint's posted messages (freeing
+        their ring slots / bounce units and signalling send completions),
+        then match arrivals waiting in this endpoint's inbox."""
+        self.progress_calls += 1
+        moved = False
+        for _ in range(max_completions):
+            with self._send_lock:
+                if not self._outbox:
+                    break
+                t = self._outbox.popleft()
+            payload = self.group._stage_payload(t.data)
+            dest = self.group.endpoint(t.dst_rank, t.dst_dev)
+            with dest._inbox_lock:
+                dest._inbox.append((self.rank, t.tag, payload))
+            st = self.group.stats
+            with self.group._stats_lock:
+                st.messages += 1
+                st.sends += 1
+                st.bytes += len(payload) + FRAME_OVERHEAD
+                if t.eager:
+                    st.eager_msgs += 1
+                else:
+                    st.rendezvous_msgs += 1
+            with self._send_lock:
+                self._inflight -= 1
+                if t.bounce:
+                    self._bounce_free += 1
+            complete(t.comp, _Record(op="send", tag=t.tag, ctx=t.ctx))
+            moved = True
+        for _ in range(max_completions):
+            with self._inbox_lock:
+                if not self._inbox:
+                    break
+                src, tag, payload = self._inbox.popleft()
+            self._match_incoming(src, tag, payload)
+            moved = True
+        return moved
+
+    def poll(self, max_completions: int = 16) -> bool:
+        """Completion-test-driven progress — the implicit entry point; at
+        this layer it shares :meth:`progress`'s implementation (polling
+        the transport IS both), as in the LCI device."""
+        return self.progress(max_completions)
+
+    # --------------------------------------------------------------- matching
+    def _match_incoming(self, src: int, tag: int, payload: bytes) -> None:
+        with self._match_lock:
+            q = self._posted.get((src, tag))
+            if q:
+                pr = q.popleft()
+            else:
+                qa = self._posted_any.get(tag)
+                if qa:
+                    pr = qa.popleft()
+                else:
+                    self._unexpected.setdefault((src, tag), deque()).append((src, payload))
+                    return
+        self._deliver_recv(pr, src, tag, payload)
+
+    def _deliver_recv(self, pr: _PostedRecv, src: int, tag: int, data: bytes) -> None:
+        complete(pr.comp, _Record(op="recv", tag=tag, src_rank=src, data=data, ctx=pr.ctx))
+
+
+from ..lci_parcelport import LCIParcelport  # noqa: E402  (no cycle: the
+# lci parcelport imports comm.progress/resources only, never this module)
+
+
+class CollectiveParcelport(LCIParcelport):
+    """The LCI parcelport's protocol logic over CollectiveComm endpoints.
+
+    Defined by *difference*: only device creation changes.  Because the
+    endpoints advertise ``one_sided_put=False``, the inherited
+    capability-driven selection drops the header path to two-sided
+    send/recv automatically — no protocol code is duplicated, which is the
+    paper's whole point about the abstraction (§2.3).  The engine-parity
+    suite asserts the decision traces match the LCI backend's bit for bit.
+    """
+
+    def _make_devices(self, fabric: Any, config: Any) -> List[CollectiveComm]:
+        group = collective_group_for(fabric, devices_per_rank=config.ndevices)
+        return [group.endpoint(self.locality.rank, d) for d in range(config.ndevices)]
+
+
+class CommChannel:
+    """The serving stack's request/response hand-off over CommInterface
+    verbs (client = rank 0, server = rank 1).
+
+    Requests ride ``TAG_REQUEST``, responses (token batches) ride
+    ``TAG_RESPONSE``; both directions pre-post tagged receives that
+    complete into shared completion queues, re-posted on reap.  Posts the
+    transport refuses park in per-direction
+    :class:`~repro.core.comm.base.InjectionThrottle`\\ s and retry under
+    the shared ``limits.retry_budget`` — the serving hot path gets the
+    SAME backpressure/throttle behaviour as the parcelport study."""
+
+    PREPOST = 16
+
+    def __init__(self, limits: Optional[ResourceLimits] = None, stage: str = "loopback"):
+        from ..completion import LCRQueue
+
+        self.limits = limits or ResourceLimits()
+        self.group = CollectiveGroup(2, 1, limits=self.limits, stage=stage)
+        self.client = self.group.endpoint(0, 0)
+        self.server = self.group.endpoint(1, 0)
+        self.request_cq = LCRQueue()  # server-side: arrived requests
+        self.response_cq = LCRQueue()  # client-side: arrived token batches
+        self._client_throttle = InjectionThrottle(self.limits.retry_budget)
+        self._server_throttle = InjectionThrottle(self.limits.retry_budget)
+        for _ in range(self.PREPOST):
+            self.server.post_recv(-1, TAG_REQUEST, self.request_cq, ctx="request")
+            self.client.post_recv(-1, TAG_RESPONSE, self.response_cq, ctx="response")
+
+    # -- posting (any thread) ------------------------------------------------
+    def _eager(self, payload: bytes) -> bool:
+        cap = self.client.eager_capacity()
+        return cap is not None and len(payload) + FRAME_OVERHEAD <= cap
+
+    def send_request(self, payload: bytes) -> None:
+        """Client → server; parks on EAGAIN, retried by the engine step."""
+        eager = self._eager(payload)
+        self._client_throttle.post_or_park(
+            lambda: self.client.post_send(1, 0, TAG_REQUEST, payload, self.response_cq, ctx="sent", eager=eager)
+        )
+
+    def send_response(self, payload: bytes) -> None:
+        """Server → client; parks on EAGAIN, retried by the engine step."""
+        eager = self._eager(payload)
+        self._server_throttle.post_or_park(
+            lambda: self.server.post_send(0, 0, TAG_RESPONSE, payload, self.request_cq, ctx="sent", eager=eager)
+        )
+
+    # -- the engine's op surface --------------------------------------------
+    def router(self) -> CompletionRouter:
+        """The channel's completion topology for the shared engine: the
+        server-side request queue, then the client-side response queue."""
+        return CompletionRouter(
+            [CompletionSource("request"), CompletionSource("response")], ndevices=1
+        )
+
+    def progress(self) -> bool:
+        a = self.client.progress()
+        b = self.server.progress()
+        return a or b
+
+    def poll(self) -> bool:
+        a = self.client.poll()
+        b = self.server.poll()
+        return a or b
+
+    def drain_retries(self) -> bool:
+        a = self._client_throttle.drain()
+        b = self._server_throttle.drain()
+        return a or b
+
+    def reap(self, source: str) -> Any:
+        return (self.request_cq if source == "request" else self.response_cq).reap()
+
+    def repost(self, ctx: Any) -> None:
+        """Keep the pre-post depth after reaping a receive completion."""
+        if ctx == "request":
+            self.server.post_recv(-1, TAG_REQUEST, self.request_cq, ctx="request")
+        elif ctx == "response":
+            self.client.post_recv(-1, TAG_RESPONSE, self.response_cq, ctx="response")
+
+    def pending_work(self) -> bool:
+        """Anything still moving: parked posts, unexchanged transits,
+        unmatched arrivals, or unreaped completions."""
+        return bool(
+            self._client_throttle
+            or self._server_throttle
+            or self.client._outbox
+            or self.server._outbox
+            or self.client._inbox
+            or self.server._inbox
+            or len(self.request_cq)
+            or len(self.response_cq)
+        )
+
+    def backpressure_parks(self) -> int:
+        return self._client_throttle.parks + self._server_throttle.parks

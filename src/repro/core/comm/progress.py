@@ -313,13 +313,31 @@ def run_step(engine: ProgressEngine, ops: Any, wid: int, role: str = ROLE_TASK) 
     """Drive one engine step synchronously (the functional executors).
 
     ``ops.execute(op) -> result`` supplies the op semantics; the DES has
-    its own driver (a simulation process) that charges costs per op."""
+    its own driver (a simulation process) that charges costs per op.
+
+    If an op raises after a ``step_trylock`` succeeded, the step lock is
+    released before the exception propagates — an adapter that implements
+    the lock for real (the serving engine does) must not stay wedged
+    behind an abandoned generator."""
     gen = engine.step(wid, role)
     result: Any = None
     execute = ops.execute
-    while True:
-        try:
-            op = gen.send(result)
-        except StopIteration as stop:
-            return bool(stop.value)
-        result = execute(op)
+    step_locked = False
+    try:
+        while True:
+            try:
+                op = gen.send(result)
+            except StopIteration as stop:
+                return bool(stop.value)
+            result = execute(op)
+            if op[0] == "step_trylock":
+                step_locked = bool(result)
+            elif op[0] == "step_unlock":
+                step_locked = False
+    except BaseException:
+        if step_locked:
+            try:
+                execute(("step_unlock",))
+            except Exception:
+                pass
+        raise

@@ -1,8 +1,15 @@
 """The AMT worker-thread executor (the HPX runtime analogue, paper §2.2.2).
 
 Worker threads execute tasks from per-worker deques (LIFO locally, FIFO
-steals — standard work-stealing) and, when idle, call the parcelport's
-``background_work`` — exactly the integration contract of Listing 2.
+steals — standard work-stealing) and, when idle, pump the communication
+runtime — exactly the integration contract of Listing 2.  The pump is the
+repo's ONE :class:`~repro.core.comm.progress.ProgressEngine`: pass
+``comm=`` any engine-driven endpoint (a parcelport, the serving channel
+ops — anything with ``.engine`` and ``.execute(op)``) and each idle worker
+runs one canonical engine step (``run_step``) under its own worker id, so
+progress policies, completion routing, and backpressure retry apply to
+host-side work the same way they do in the parcelport study.  The legacy
+opaque ``background_work`` callable remains for callers without an engine.
 
 The training/serving framework uses this executor for all host-side
 asynchronous work (checkpoint shard writes, data prefetch, metric sinks),
@@ -18,6 +25,7 @@ import time
 from collections import deque
 from typing import Any, Callable, List, Optional
 
+from .comm.progress import run_step
 from .worker import set_worker_id
 
 __all__ = ["AMTExecutor", "TaskFuture"]
@@ -69,11 +77,18 @@ class AMTExecutor:
         self,
         n_workers: int = 2,
         background_work: Optional[Callable[[], bool]] = None,
+        comm: Any = None,
         idle_sleep: float = 50e-6,
         name: str = "amt",
     ):
+        """``comm``: an engine-driven communication endpoint — anything
+        with ``.engine`` (the shared ProgressEngine) and ``.execute(op)``,
+        e.g. a parcelport.  Idle workers then run one engine step per pump
+        instead of an opaque callable (the Listing 2 contract over the
+        shared engine)."""
         self.n_workers = n_workers
         self.background_work = background_work
+        self.comm = comm
         self.idle_sleep = idle_sleep
         self._states = [_WorkerState() for _ in range(n_workers)]
         self._stop = threading.Event()
@@ -97,6 +112,13 @@ class AMTExecutor:
     def progress(self) -> bool:
         """Explicit progress from the caller thread (paper §3.3.4 applied to
         host work: the train loop pumps this once per step)."""
+        return self._pump(0)
+
+    def _pump(self, wid: int) -> bool:
+        """One communication pump: a canonical step of the shared engine
+        when a comm endpoint is attached, else the legacy callable."""
+        if self.comm is not None:
+            return run_step(self.comm.engine, self.comm, wid)
         if self.background_work is not None:
             return self.background_work()
         return False
@@ -147,12 +169,11 @@ class AMTExecutor:
                     fut.set_error(e)
                 st.executed += 1
                 continue
-            # Idle: pump the communication runtime (Listing 2 contract).
-            progressed = False
-            if self.background_work is not None:
-                try:
-                    progressed = self.background_work()
-                except BaseException:
-                    pass
+            # Idle: pump the communication runtime (Listing 2 contract) —
+            # one shared-engine step under this worker's id.
+            try:
+                progressed = self._pump(w)
+            except BaseException:
+                progressed = False
             if not progressed:
                 time.sleep(self.idle_sleep)

@@ -12,7 +12,16 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 from .parcelport import World
 from .variants import make_parcelport_factory, max_devices, variant_limits
 
-__all__ = ["deliver_payloads"]
+__all__ = ["deliver_payloads", "transport_stats"]
+
+
+def transport_stats(world: "World"):
+    """The stats of whichever transport actually carried the bytes: the
+    collective group's when the variant rode the JAX-collectives backend,
+    the fabric's otherwise.  Both share the ``FabricStats`` shape, so
+    benchmark code reads either through this one accessor."""
+    group = getattr(world.fabric, "_collective_group", None)
+    return group.stats if group is not None else world.fabric.stats
 
 
 def deliver_payloads(

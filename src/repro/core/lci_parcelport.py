@@ -206,11 +206,10 @@ class LCIParcelport(Parcelport):
         else:
             self.cq = make_completion_queue(config.cq_kind)
         self.sync_pool = SynchronizerPool()
-        self.devices: List[LCIDevice] = []
-        for d in range(config.ndevices):
-            net = fabric.device(rank, d)
-            dev = LCIDevice(net, lock_mode=config.lock_mode, put_target_comp=self._cq_for(d))
-            self.devices.append(dev)
+        # Backend creation is a hook: CollectiveParcelport swaps the LCI
+        # devices for CollectiveComm endpoints and inherits every protocol
+        # decision above this line untouched (selection is by capability).
+        self.devices: List[Any] = self._make_devices(fabric, config)
         # Protocol-path selection by CAPABILITY, not flag alone (§2.3): the
         # one-sided header path needs a backend that advertises dynamic
         # put; a backend without it falls back to the two-sided path the
@@ -241,16 +240,28 @@ class LCIParcelport(Parcelport):
         # progress role; task workers keep the implicit fallback poll, so
         # delivery never depends on thread scheduling.
         self._pw_stop: Optional[threading.Event] = None
+        self._pw_threads: List[threading.Thread] = []
         if config.progress_workers > 0:
             self._pw_stop = threading.Event()
             ref = weakref.ref(self)
             for i in range(config.progress_workers):
-                threading.Thread(
+                t = threading.Thread(
                     target=_progress_worker_loop,
                     args=(ref, self._pw_stop),
                     name=f"lci-prg{rank}.{i}",
                     daemon=True,
-                ).start()
+                )
+                self._pw_threads.append(t)
+                t.start()
+
+    def _make_devices(self, fabric: Fabric, config: LCIPPConfig) -> List[LCIDevice]:
+        """Open this parcelport's communication backends (one per device
+        index).  Subclasses swap the backend family here."""
+        rank = self.locality.rank
+        return [
+            LCIDevice(fabric.device(rank, d), lock_mode=config.lock_mode, put_target_comp=self._cq_for(d))
+            for d in range(config.ndevices)
+        ]
 
     def _build_router(self, cfg: LCIPPConfig) -> CompletionRouter:
         srcs: List[CompletionSource] = []
@@ -271,10 +282,24 @@ class LCIParcelport(Parcelport):
         return self.cq if self._dev_cqs is None else self._dev_cqs[d]
 
     def close(self) -> None:
-        """Stop the dedicated progress threads (optional; the weakref loop
-        also exits once the parcelport is garbage collected)."""
+        """Stop AND JOIN the dedicated progress threads.  Idempotent.
+
+        Relying on weakref finalization alone leaked live daemon threads
+        for as long as the parcelport object survived (benchmarks and
+        tests construct many short-lived worlds); an explicit close joins
+        them deterministically — the weakref loop remains only the GC
+        backstop for worlds that never call it."""
         if self._pw_stop is not None:
             self._pw_stop.set()
+            for t in self._pw_threads:
+                t.join(timeout=5.0)
+            self._pw_threads = []
+
+    def __enter__(self) -> "LCIParcelport":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
 
     # ------------------------------------------------------------------ send
     def _worker_device(self) -> int:

@@ -127,6 +127,15 @@ class World:
                     any_progress = True
         return any_progress
 
+    def close(self) -> None:
+        """Release per-parcelport resources — in particular, stop and join
+        any dedicated progress threads (``lci_prg{n}``) so repeated world
+        construction cannot accumulate live daemons."""
+        for loc in self.localities:
+            close = getattr(loc.parcelport, "close", None)
+            if close is not None:
+                close()
+
     def drain(self, max_rounds: int = 100_000) -> None:
         """Pump until quiescent (no progress for a few consecutive rounds).
         Raises if the world stops moving while a parcelport still holds

@@ -125,6 +125,11 @@ _FIXED = {
     # CompletionRouter axis is sweepable against per-device queues
     # (`.variant(cq_scope='device')`).
     "lci_shared_cq": lambda: LCIPPConfig(name="lci_shared_cq", cq_scope="shared"),
+    # The JAX-collectives backend (the serving stack's transport): same
+    # parcelport protocol logic, CollectiveComm endpoints instead of LCI
+    # devices.  No one-sided put, so headers ride two-sided send/recv BY
+    # CAPABILITY — the config states the honest path up front.
+    "collective": lambda: LCIPPConfig(name="collective", header_mode="sendrecv", header_comp="queue"),
 }
 for _name, _build in _FIXED.items():
     REGISTRY.register(_name, _build)
@@ -165,6 +170,21 @@ REGISTRY.register_family(VariantSpec(
     ),
     canonical=((0,), (2,)),
     doc="dedicated progress workers: {n} reserved cores drive the engine (0 = all workers poll)",
+))
+# collective-backend progress family: the JAX-collectives transport under
+# n dedicated progress workers — the serving stack's progress-policy axis,
+# mirroring lci_prg{n} over the other backend.
+REGISTRY.register_family(VariantSpec(
+    grammar="collective_prg{n}",
+    build=lambda name, n: LCIPPConfig(
+        name=name,
+        header_mode="sendrecv",
+        header_comp="queue",
+        progress_workers=n,
+        progress_mode="explicit" if n == 0 else "implicit",
+    ),
+    canonical=((2,),),
+    doc="collective backend with {n} dedicated progress workers",
 ))
 # bounded-injection family (§3.3.4, ROADMAP follow-up): finite send ring +
 # bounce pool, both `depth` deep, through the shared resource model.
@@ -216,4 +236,10 @@ def make_parcelport_factory(name: str) -> Callable[[Locality, Fabric], Parcelpor
     if name == "mpi_a":
         return lambda loc, fab: MPIParcelport(loc, fab, aggregation=True)
     cfg = VARIANTS[name]
+    if name.startswith("collective"):
+        # the JAX-collectives backend (imported lazily: it sits above the
+        # parcelport layer this module belongs to)
+        from .comm.collective import CollectiveParcelport
+
+        return lambda loc, fab: CollectiveParcelport(loc, fab, cfg)
     return lambda loc, fab: LCIParcelport(loc, fab, cfg)

@@ -2,7 +2,11 @@
 
 Runs the continuous-batching engine on a (smoke) model with a synthetic
 request stream submitted from multiple client threads, and prints
-latency/throughput stats — the serving-side end-to-end driver.
+latency/throughput stats — the serving-side end-to-end driver.  The
+request/response hand-off rides the shared comm layer (``--transport
+collective``, the default): requests and token batches cross
+``CommInterface`` verbs, driven by the same ``ProgressEngine`` as the
+parcelport study; ``--transport inline`` runs the legacy direct path.
 """
 from __future__ import annotations
 
@@ -26,11 +30,14 @@ def main() -> int:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--transport", choices=("collective", "inline"), default="collective")
     args = ap.parse_args()
 
     arch = get_smoke_config(args.arch)
     params = init_params(jax.random.PRNGKey(0), arch)
-    server = InferenceServer(arch, params, ServeConfig(slots=args.slots, context=256))
+    server = InferenceServer(
+        arch, params, ServeConfig(slots=args.slots, context=256, transport=args.transport)
+    )
     rng = np.random.default_rng(0)
     reqs = []
     lock = threading.Lock()
@@ -48,10 +55,9 @@ def main() -> int:
     t0 = time.monotonic()
     for t in threads:
         t.start()
-    # engine loop = the progress engine (paper §3.3.4, explicit driving)
-    while any(t.is_alive() for t in threads) or len(server.queue) or any(
-        s is not None for s in server._slots
-    ):
+    # engine loop = the shared progress engine (paper §3.3.4, explicit
+    # driving): each step pumps the comm hand-off and the batched decode
+    while any(t.is_alive() for t in threads) or not server.idle():
         if not server.step():
             time.sleep(1e-3)
     for t in threads:
@@ -63,7 +69,7 @@ def main() -> int:
     print(
         f"requests={len(done)}/{len(reqs)} engine_steps={server.steps} "
         f"tokens={server.tokens_out} throughput={server.tokens_out/dt:.1f} tok/s "
-        f"ttft_p50={np.median(ttft)*1e3:.1f}ms"
+        f"ttft_p50={np.median(ttft)*1e3:.1f}ms transport={args.transport}"
     )
     return 0 if len(done) == len(reqs) else 1
 

@@ -1,4 +1,4 @@
-"""Continuous-batching inference server.
+"""Continuous-batching inference server over the shared comm layer.
 
 vLLM-style slot scheduler on the JAX decode path: a fixed pool of ``slots``
 shares one ring KV cache; requests arrive asynchronously (any thread may
@@ -8,24 +8,38 @@ active slots in one batched ``decode_step``.  Finished sequences free
 their slot immediately; new requests join between steps (continuous
 batching, no head-of-line blocking).
 
-The request queue and completion delivery run on the LCRQ completion
-queues from :mod:`repro.core` — the serving engine is an AMT consumer of
-the paper's runtime, with the engine loop as the progress engine.
+**The request/response hand-off is the repo's communication abstraction**
+(ISSUE 5): with ``transport='collective'`` (the default), requests and
+per-token responses travel as bytes through :class:`~repro.core.comm.
+interface.CommInterface` verbs on a :class:`~repro.core.comm.collective.
+CommChannel` — typed EAGAIN backpressure parks and retries under the
+shared :class:`~repro.core.comm.resources.ResourceLimits`, token
+completions for all active slots aggregate into ONE response message per
+engine step (§2.2.2 applied to serving), and the engine loop drives the
+SAME :class:`~repro.core.comm.progress.ProgressEngine` as the parcelports
+(policy via ``ProgressPolicy.for_config``, exactly like ``LCIPPConfig`` /
+``SimConfig``).  ``transport='inline'`` keeps the legacy direct hand-off
+as the round-trip parity reference — both paths produce identical
+responses for the same request stream (tests/test_executor_serve.py).
 """
 from __future__ import annotations
 
 import itertools
+import pickle
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..core.completion import LCRQueue
+from ..core.comm.collective import CommChannel
+from ..core.comm.progress import ProgressEngine, ProgressPolicy, run_step
+from ..core.comm.resources import ResourceLimits
 from ..models import decode_step, init_cache, prefill
 
 __all__ = ["ServeConfig", "Request", "InferenceServer"]
@@ -37,6 +51,18 @@ class ServeConfig:
     context: int = 256  # KV slots per sequence
     max_prefill: int = 64  # prompt length bucket (padded)
     greedy: bool = True
+    # Request/response hand-off: 'collective' rides CommInterface verbs on
+    # a CollectiveComm pair driven by the shared ProgressEngine; 'inline'
+    # is the legacy direct hand-off (the parity reference in tests).
+    transport: str = "collective"
+    # ProgressPolicy.for_config axes — the same fields, by design, as
+    # LCIPPConfig and the DES SimConfig: the serving hot path sweeps the
+    # §5.3 policy ladder like any parcelport variant.
+    progress_mode: str = "explicit"  # 'explicit' | 'implicit'
+    lock_mode: str = "none"
+    progress_workers: int = 0
+    # The shared resource model (§3.3.4) bounding the hand-off channel.
+    limits: ResourceLimits = field(default_factory=ResourceLimits)
 
 
 @dataclass
@@ -52,12 +78,16 @@ class Request:
 
 
 class InferenceServer:
-    def __init__(self, arch: ArchConfig, params: Any, cfg: ServeConfig = ServeConfig()):
+    def __init__(self, arch: ArchConfig, params: Any, cfg: Optional[ServeConfig] = None):
+        # Per-instance config: a shared mutable default (`cfg=ServeConfig()`
+        # evaluated once at import) aliased every no-arg server's state.
+        self.cfg = cfg = ServeConfig() if cfg is None else cfg
         self.arch = arch
         self.params = params
-        self.cfg = cfg
         self._rid = itertools.count()
-        self.queue = LCRQueue()  # incoming requests (MPMC — any thread)
+        # Server-side admission queue: requests that have ARRIVED (through
+        # the channel, or directly in inline mode) and await a free slot.
+        self._pending: deque = deque()
         self._slots: List[Optional[Request]] = [None] * cfg.slots
         self._positions = np.zeros((cfg.slots,), np.int32)
         self._remaining = np.zeros((cfg.slots,), np.int32)
@@ -72,13 +102,129 @@ class InferenceServer:
         )
         self.steps = 0
         self.tokens_out = 0
+        # The comm hand-off (collective transport): channel + the SAME
+        # progress engine as the parcelports, policy from this config.
+        self._channel: Optional[CommChannel] = None
+        self.engine: Optional[ProgressEngine] = None
+        self._inflight: Dict[int, Request] = {}  # rid -> client-side Request
+        self._inflight_lock = threading.Lock()
+        self._outbox: List[tuple] = []  # (rid, tok, done) batch of one step
+        if cfg.transport == "collective":
+            self._channel = CommChannel(limits=cfg.limits)
+            # step_lock=True: the whole engine step runs behind a try-lock
+            # (implemented in `execute`), so a second driver — e.g.
+            # AMTExecutor(comm=server) pumping from idle workers — can
+            # never interleave dispatches with the serve loop's own step.
+            self.engine = ProgressEngine(
+                ProgressPolicy.for_config(cfg).variant(step_lock=True),
+                self._channel.router(),
+                ndevices=1,
+            )
+            self._step_lock = threading.Lock()
+        else:
+            assert cfg.transport == "inline", cfg.transport
 
     # ----------------------------------------------------------------- client
     def submit(self, prompt: List[int], max_new: int = 16) -> Request:
         req = Request(rid=next(self._rid), prompt=list(prompt), max_new=max_new)
         req.submitted_at = time.monotonic()
-        self.queue.push(req)
+        if self._channel is None:
+            self._pending.append(req)  # legacy direct hand-off
+        else:
+            with self._inflight_lock:
+                self._inflight[req.rid] = req
+            # the request crosses the comm layer as bytes; EAGAIN parks it
+            # in the channel throttle, retried by the engine step
+            self._channel.send_request(pickle.dumps((req.rid, req.prompt, req.max_new)))
         return req
+
+    # -------------------------------------------- the engine's op adapter
+    def execute(self, op: tuple) -> Any:
+        """Execute one :class:`ProgressEngine` op against the hand-off
+        channel — the serving stack's half of the engine contract (the
+        exact analogue of ``LCIParcelport.execute``)."""
+        kind = op[0]
+        ch = self._channel
+        if kind == "reap":
+            return ch.reap(op[1].name)
+        if kind == "dispatch":
+            rec = op[3]
+            if rec.op == "send":
+                return True  # send completion: slot already recycled
+            ch.repost(rec.ctx)  # keep the pre-post depth
+            if rec.ctx == "request":
+                rid, prompt, max_new = pickle.loads(rec.data)
+                self._pending.append(Request(rid=rid, prompt=prompt, max_new=max_new))
+            else:  # response: a token batch for the client side
+                self._apply_response(rec.data)
+            return True
+        if kind == "progress":
+            return ch.progress()
+        if kind == "poll":
+            return ch.poll()
+        if kind == "drain_retries":
+            return ch.drain_retries()
+        if kind == "step_trylock":
+            return self._step_lock.acquire(blocking=False)
+        if kind == "step_unlock":
+            self._step_lock.release()
+            return True
+        if kind == "dev_trylock":
+            return True
+        return False
+
+    def _comm_step(self) -> bool:
+        """One canonical engine step over the hand-off channel (drain
+        retries → progress → reap → dispatch)."""
+        if self.engine is None:
+            return False
+        return run_step(self.engine, self, 0)
+
+    def _apply_response(self, payload: bytes) -> None:
+        """Client side: apply an arrived token batch to its requests.
+
+        A finished request leaves ``_inflight`` only AFTER its final
+        token is appended and ``done_event`` is set — ``idle()`` reads
+        ``_inflight``, and must never report true while another driver
+        thread is still mid-application."""
+        now = time.monotonic()
+        for rid, tok, done in pickle.loads(payload):
+            with self._inflight_lock:
+                req = self._inflight.get(rid)
+            if req is None:
+                continue
+            if req.first_token_at is None:
+                req.first_token_at = now
+            req.out_tokens.append(tok)
+            if done:
+                req.finished_at = now
+                req.done_event.set()
+                with self._inflight_lock:
+                    self._inflight.pop(rid, None)
+
+    def _emit(self, req: Request, tok: int, done: bool) -> None:
+        """One generated token leaves the server: directly into the
+        client's Request (inline), or into this step's outbound batch —
+        token completions for all active slots aggregate into ONE response
+        message per engine step (§2.2.2 on the serving hot path)."""
+        self.tokens_out += 1
+        if self._channel is None:
+            now = time.monotonic()
+            if req.first_token_at is None:
+                req.first_token_at = now
+            req.out_tokens.append(tok)
+            if done:
+                req.finished_at = now
+                req.done_event.set()
+        else:
+            self._outbox.append((req.rid, tok, done))
+
+    def _flush_outbox(self) -> bool:
+        if self._channel is None or not self._outbox:
+            return False
+        batch, self._outbox = self._outbox, []
+        self._channel.send_response(pickle.dumps(batch))
+        return True
 
     # ----------------------------------------------------------------- engine
     def _free_slots(self) -> List[int]:
@@ -86,10 +232,9 @@ class InferenceServer:
 
     def _admit(self) -> None:
         for slot in self._free_slots():
-            req = self.queue.pop()
-            if req is None:
+            if not self._pending:
                 return
-            self._start(slot, req)
+            self._start(slot, self._pending.popleft())
 
     def _start(self, slot: int, req: Request) -> None:
         cfg, arch = self.cfg, self.arch
@@ -109,28 +254,22 @@ class InferenceServer:
 
         self.cache = jax.tree.map(splice, self.cache, one)
         tok = int(jnp.argmax(logits[0, -1]))
-        req.out_tokens.append(tok)
-        req.first_token_at = time.monotonic()
-        self._slots[slot] = req
+        done = req.max_new <= 1
+        self._slots[slot] = None if done else req
         self._positions[slot] = len(prompt)
         self._remaining[slot] = req.max_new - 1
         self._last_tok[slot] = tok
-        self.tokens_out += 1
-        if req.max_new <= 1:
-            self._finish(slot)
-
-    def _finish(self, slot: int) -> None:
-        req = self._slots[slot]
-        if req is not None:
-            req.finished_at = time.monotonic()
-            req.done_event.set()
-        self._slots[slot] = None
+        self._emit(req, tok, done)
 
     def step(self) -> bool:
-        """One engine iteration: admit, batched-decode all active slots."""
+        """One engine iteration: pump the comm hand-off, admit, batched-
+        decode all active slots, flush the token batch back."""
+        self._comm_step()
         self._admit()
         active = [i for i, r in enumerate(self._slots) if r is not None]
         if not active:
+            if self._flush_outbox():  # e.g. prefill-only finishes
+                self._comm_step()
             return False
         toks = jnp.asarray(self._last_tok[:, None])
         pos = jnp.asarray(self._positions)
@@ -141,15 +280,30 @@ class InferenceServer:
             self._remaining[i] -= 1
             self._last_tok[i] = nxt[i]
             req = self._slots[i]
-            req.out_tokens.append(int(nxt[i]))
-            self.tokens_out += 1
-            if self._remaining[i] <= 0:
-                self._finish(i)
+            done = self._remaining[i] <= 0
+            self._emit(req, int(nxt[i]), done)
+            if done:
+                self._slots[i] = None
         self.steps += 1
+        self._flush_outbox()
+        self._comm_step()
+        return True
+
+    # ------------------------------------------------------------- lifecycle
+    def pending_requests(self) -> int:
+        """Requests admitted server-side but not yet slotted."""
+        return len(self._pending)
+
+    def idle(self) -> bool:
+        """Nothing slotted, nothing pending, nothing in flight on the
+        hand-off channel."""
+        if any(r is not None for r in self._slots) or self._pending:
+            return False
+        if self._channel is not None and (self._inflight or self._channel.pending_work()):
+            return False
         return True
 
     def run_until_idle(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
-            if not self.step() and len(self.queue) == 0:
-                if all(r is None for r in self._slots):
-                    return
+            if not self.step() and self.idle():
+                return

@@ -7,17 +7,27 @@ the quantize→(implicit all-reduce)→dequantize sequence lets XLA move int8
 bytes instead of f32 across the data axes for the replicated-gradient
 reduction — a 4× collective-bytes reduction visible in the dry-run.
 
+The *host-side* gradient-sync hand-off rides the shared comm layer:
+:func:`pack_grads` / :func:`unpack_grads` turn a gradient pytree into wire
+bytes and back, so explicit data-parallel ranks exchange compressed
+gradients through :class:`~repro.core.comm.interface.CommInterface` verbs
+(e.g. a :class:`~repro.core.comm.collective.CommChannel`) with the same
+backpressure and progress machinery as the parcelport study — asserted by
+the round-trip test in ``tests/test_train.py``.
+
 Convergence is validated in ``tests/test_train.py`` (loss decreases within
 tolerance of the uncompressed baseline on a smoke config).
 """
 from __future__ import annotations
 
+import pickle
 from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["compress_grads_int8_ef"]
+__all__ = ["compress_grads_int8_ef", "pack_grads", "unpack_grads"]
 
 
 def _q(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -35,7 +45,30 @@ def compress_grads_int8_ef(grads: Any, ef: Any) -> Tuple[Any, Any]:
         deq = q.astype(jnp.float32) * scale
         return deq, g32 - deq
 
-    out = jax.tree.map(leaf, grads, ef)
-    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
-    new_ef = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    pairs = jax.tree.map(leaf, grads, ef)
+    # Split the tree-of-(deq, err) pairs into two trees by STRUCTURE, not
+    # by sniffing leaves: transposing over the exact outer treedef keeps a
+    # gradient pytree whose own leaf containers are tuples intact.  (The
+    # previous `is_leaf=lambda t: isinstance(t, tuple)` split misfired on
+    # such trees: it stopped at the container tuple and quietly mixed the
+    # dequantized values with the error-feedback state.)
+    deq, new_ef = jax.tree.transpose(
+        jax.tree.structure(grads), jax.tree.structure((0, 0)), pairs
+    )
     return deq, new_ef
+
+
+def pack_grads(tree: Any) -> bytes:
+    """Serialize a gradient pytree's leaves to wire bytes for the
+    host-side DP hand-off over CommInterface verbs.  Structure travels
+    out of band (both ranks hold the same model), so the wire carries
+    only the arrays — int8 leaves stay int8 (the 4× reduction)."""
+    leaves = jax.tree.leaves(tree)
+    return pickle.dumps([np.asarray(leaf) for leaf in leaves])
+
+
+def unpack_grads(data: bytes, like: Any) -> Any:
+    """Rebuild a gradient pytree from :func:`pack_grads` bytes using the
+    receiver's own structure (``like``)."""
+    leaves = [jnp.asarray(a) for a in pickle.loads(data)]
+    return jax.tree.unflatten(jax.tree.structure(like), leaves)

@@ -36,7 +36,7 @@ from repro.core.variants import VARIANTS, make_parcelport_factory, variant_names
 
 REPO = Path(__file__).resolve().parent.parent
 
-PARITY_VARIANTS = ["mpi", "mpi_a", "lci", "lci_agg_eager"]
+PARITY_VARIANTS = ["mpi", "mpi_a", "lci", "lci_agg_eager", "collective"]
 PARITY_PAYLOADS = [bytes([i % 251]) * (7 + 311 * i % 20_000) for i in range(40)]
 
 
@@ -135,6 +135,98 @@ def test_stats_conservation_after_drain(variant):
     assert all(pp.retry_queue_depth() == 0 for pp in pps)
 
 
+# ------------------------------------------- the collective backend (ISSUE 5)
+def test_collective_backend_conforms_and_is_honest():
+    """CollectiveComm is a full CommInterface backend with HONEST
+    capabilities: the JAX collectives layer has no one-sided put, so the
+    backend says so instead of emulating one."""
+    from repro.core.comm.collective import CollectiveGroup
+
+    comm = CollectiveGroup(2).endpoint(0)
+    assert isinstance(comm, CommInterface)
+    caps = comm.capabilities
+    assert not caps.one_sided_put
+    assert caps.queue_completion and caps.explicit_progress
+    assert not caps.bounded_injection  # unbounded by default
+    with pytest.raises(UnsupportedCapabilityError):
+        comm.post_put_signal(1, 0, b"data", Synchronizer())
+    bounded = CollectiveGroup(2, limits=ResourceLimits(send_queue_depth=4)).endpoint(0)
+    assert bounded.capabilities.bounded_injection
+
+
+def test_collective_eagain_kinds_surfaced():
+    """A full transit ring and an exhausted eager bounce accounting are
+    DIFFERENT refusals, exactly as on the fabric-backed device."""
+    from repro.core.comm.collective import CollectiveGroup
+
+    ring = CollectiveGroup(2, limits=ResourceLimits(send_queue_depth=1, bounce_buffers=1,
+                                                    bounce_buffer_size=1024)).endpoint(0)
+    assert ring.post_send(1, 0, 5, b"x" * 16, LCRQueue(), eager=True) is PostStatus.OK
+    assert ring.post_send(1, 0, 5, b"y" * 16, LCRQueue(), eager=True) is PostStatus.EAGAIN_QUEUE
+    pool = CollectiveGroup(2, limits=ResourceLimits(bounce_buffers=1,
+                                                    bounce_buffer_size=1024)).endpoint(0)
+    assert pool.post_send(1, 0, 5, b"x" * 16, LCRQueue(), eager=True) is PostStatus.OK
+    assert pool.post_send(1, 0, 5, b"y" * 16, LCRQueue(), eager=True) is PostStatus.EAGAIN_BUFFER
+
+
+def test_collective_roundtrip_matching_and_unexpected_queue():
+    from repro.core.comm.collective import CollectiveGroup
+
+    grp = CollectiveGroup(2)
+    a, b = grp.endpoint(0), grp.endpoint(1)
+    got = LCRQueue()
+    b.post_recv(-1, 7, got)  # any-source receive
+    a.post_send(1, 0, 7, b"hello", LCRQueue())
+    a.progress()  # exchange
+    b.progress()  # match
+    rec = got.reap()
+    assert rec.op == "recv" and rec.data == b"hello" and rec.src_rank == 0
+    # arrival beats its receive: parks unexpected, matches on the post
+    a.post_send(1, 0, 9, b"late", LCRQueue())
+    a.progress()
+    b.progress()
+    late = LCRQueue()
+    b.post_recv(0, 9, late)
+    assert late.reap().data == b"late"
+    # progress frees the ring slot and signals the send completion
+    assert a._inflight == 0 and grp.stats.messages == 2
+
+
+def test_collective_jax_stage_delivers_identical_bytes():
+    """stage='jax' rides every payload through a JAX device buffer (the
+    one-host degenerate collective) — bytes must survive unchanged."""
+    pytest.importorskip("jax")
+    from repro.core.comm.collective import CollectiveGroup
+
+    grp = CollectiveGroup(2, stage="jax")
+    a, b = grp.endpoint(0), grp.endpoint(1)
+    payload = bytes(range(256)) * 33
+    got = LCRQueue()
+    b.post_recv(0, 3, got)
+    a.post_send(1, 0, 3, payload, LCRQueue())
+    a.progress()
+    b.progress()
+    assert got.reap().data == payload
+
+
+def test_collective_parcelport_shares_resource_model():
+    """variant_limits('collective') flows through the fabric into the one
+    CollectiveGroup of the world — the shared ResourceLimits binds the
+    collective transport exactly as it binds the fabric."""
+    from repro.core.harness import transport_stats
+
+    lim = ResourceLimits(send_queue_depth=2, bounce_buffers=2, bounce_buffer_size=65_536)
+    world, got = deliver_payloads("collective", [bytes([i]) * 600 for i in range(30)],
+                                  fabric_kwargs={"limits": lim})
+    assert len(got) == 30
+    group = world.fabric._collective_group
+    assert group.limits is lim
+    st = transport_stats(world)
+    assert st is group.stats
+    assert st.backpressure_events > 0  # the bound actually bit
+    assert sum(loc.parcelport.stats_backpressure_parks for loc in world.localities) > 0
+
+
 # --------------------------------------------------- legacy name equality
 def _expected_legacy_variants():
     """The pre-redesign VARIANTS dict, reconstructed literally (PR 1-2
@@ -193,6 +285,10 @@ def test_family_members_resolve_without_preregistration():
         VARIANTS["definitely_not_a_variant"]
     # resolution is cached: one name, one object
     assert VARIANTS["lci_b8"] is cfg
+    # the collective family resolves on demand like every other family
+    assert VARIANTS["collective_prg3"].progress_workers == 3
+    assert VARIANTS["collective"].header_mode == "sendrecv"
+    assert {"collective", "collective_prg2"} <= set(variant_names())
 
 
 def test_family_factory_builds_bounded_world():
@@ -245,10 +341,23 @@ def test_aggregate_detection_is_out_of_band():
 
 
 # ------------------------------------------------------------- drift gate
-def test_check_api_gate_green():
+def _load_check_api():
     spec = importlib.util.spec_from_file_location("check_api", REPO / "tools" / "check_api.py")
-    check_api = importlib.util.module_from_spec(spec)
-    spec.loader.exec_module(check_api)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_api_gate_green():
     failures: list = []
-    check_api.check_api(failures)
+    _load_check_api().check_api(failures)
+    assert not failures, failures
+
+
+def test_check_api_serving_gate_green():
+    """Gate 5: the serving stack hands requests/responses through the
+    shared CommInterface and no private hand-off loops have re-grown in
+    serve/, launch/serve.py, or the executor."""
+    failures: list = []
+    _load_check_api().check_serving_comm(failures)
     assert not failures, failures

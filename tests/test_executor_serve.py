@@ -1,4 +1,10 @@
-"""AMT executor (work stealing, background-work contract) + inference server."""
+"""AMT executor (work stealing, background-work contract) + inference server.
+
+Since ISSUE 5 the serving request/response hand-off rides the shared comm
+layer (CommInterface verbs on a CollectiveComm pair, driven by the one
+ProgressEngine); these tests cover both hand-off paths and their parity,
+the ServeConfig-aliasing regression, the bounded (EAGAIN) serving channel,
+and the executor's engine-driven idle pump."""
 import threading
 import time
 
@@ -8,6 +14,7 @@ import numpy as np
 import pytest
 
 from repro.configs import SMOKES
+from repro.core.comm.resources import ResourceLimits
 from repro.core.executor import AMTExecutor
 from repro.models import decode_step, init_cache, init_params, prefill
 from repro.serve import InferenceServer, ServeConfig
@@ -42,6 +49,33 @@ def test_executor_background_work_pumped():
         ex.shutdown()
 
 
+def test_executor_idle_pump_drives_shared_engine():
+    """comm=<parcelport>: idle workers run canonical steps of the ONE
+    ProgressEngine (run_step under their own worker id) instead of an
+    opaque callable — parcels deliver with no explicit pumping at all."""
+    from repro.core.parcelport import World
+    from repro.core.variants import make_parcelport_factory
+
+    world = World(2, make_parcelport_factory("lci"), devices_per_rank=2)
+    got: list = []
+    world.localities[1].register_action("sink", lambda *a: got.append(a))
+    execs = [
+        AMTExecutor(n_workers=2, comm=loc.parcelport, name=f"rank{loc.rank}")
+        for loc in world.localities
+    ]
+    try:
+        for i in range(10):
+            world.localities[0].async_action(1, "sink", bytes([i]) * 1_000)
+        deadline = time.monotonic() + 20
+        while len(got) < 10 and time.monotonic() < deadline:
+            time.sleep(0.005)
+        assert len(got) == 10
+    finally:
+        for ex in execs:
+            ex.shutdown()
+        world.close()
+
+
 def test_executor_work_stealing():
     ex = AMTExecutor(n_workers=2)
     try:
@@ -56,6 +90,112 @@ def test_executor_work_stealing():
 
 
 # ------------------------------------------------------------------- serving
+def _smoke_model():
+    cfg = SMOKES["tinyllama-1.1b"].variant(dtype="float32")
+    return cfg, init_params(jax.random.PRNGKey(0), cfg)
+
+
+def test_serve_config_not_aliased_between_servers():
+    """Regression: `cfg: ServeConfig = ServeConfig()` evaluated the
+    default ONCE at import — every no-arg server shared one mutable
+    config object.  Two servers must get independent configs."""
+    arch, params = _smoke_model()
+    s1 = InferenceServer(arch, params)
+    s2 = InferenceServer(arch, params)
+    assert s1.cfg is not s2.cfg
+    s1.cfg.slots = 99
+    assert s2.cfg.slots != 99
+    assert ServeConfig().slots != 99  # the dataclass default is untouched
+
+
+def _run_stream(transport, limits=None):
+    arch, params = _smoke_model()
+    kw = {"limits": limits} if limits is not None else {}
+    server = InferenceServer(
+        arch, params, ServeConfig(slots=2, context=64, transport=transport, **kw)
+    )
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9], [2, 2], [9, 1, 4]]
+    reqs = [server.submit(p, max_new=4 + i % 3) for i, p in enumerate(prompts)]
+    server.run_until_idle()
+    assert all(r.done_event.is_set() for r in reqs)
+    assert [len(r.out_tokens) for r in reqs] == [4 + i % 3 for i in range(len(prompts))]
+    return [r.out_tokens for r in reqs], server
+
+
+def test_serving_roundtrip_parity_inline_vs_collective():
+    """The acceptance gate (ISSUE 5): the same request stream produces
+    IDENTICAL responses on the legacy direct path and on the CommInterface
+    hand-off — the comm layer moved the bytes, not the math."""
+    inline, _ = _run_stream("inline")
+    collective, server = _run_stream("collective")
+    assert inline == collective
+    # and the collective path actually carried the traffic
+    assert server._channel.group.stats.messages > 0
+
+
+def test_serving_collective_backpressure_throttles_not_loses():
+    """A tightly bounded hand-off channel must surface EAGAIN (parked
+    posts) AND still complete every request — the §3.3.4 throttle on the
+    serving hot path."""
+    limits = ResourceLimits(send_queue_depth=1, bounce_buffers=1, bounce_buffer_size=4_096)
+    tokens, server = _run_stream("collective", limits=limits)
+    assert server._channel.backpressure_parks() > 0
+    assert server._channel.group.stats.backpressure_events > 0
+    # identical responses regardless of the bound (backpressure delays,
+    # never drops or reorders a request's tokens)
+    unbounded, _ = _run_stream("collective")
+    assert tokens == unbounded
+
+
+def test_executor_pumps_serving_engine_concurrently():
+    """The documented integration: AMTExecutor(comm=server) idle workers
+    pump the serving engine WHILE the serve loop steps.  The engine's
+    step_lock serializes dispatch and the FIFO throttle keeps token
+    batches ordered — responses identical to the single-driver run."""
+    arch, params = _smoke_model()
+    prompts = [[1, 2, 3], [4, 5], [6, 7, 8, 9]]
+
+    def run(with_executor, limits=None):
+        kw = {"limits": limits} if limits is not None else {}
+        server = InferenceServer(
+            arch, params, ServeConfig(slots=2, context=64, transport="collective", **kw)
+        )
+        ex = AMTExecutor(n_workers=2, comm=server) if with_executor else None
+        try:
+            reqs = [server.submit(p, max_new=5) for p in prompts]
+            server.run_until_idle()
+            assert all(r.done_event.is_set() for r in reqs)
+            return [r.out_tokens for r in reqs]
+        finally:
+            if ex is not None:
+                ex.shutdown()
+
+    reference = run(False)
+    assert run(True) == reference
+    # and under a tightly bounded channel: concurrent drain vs fresh posts
+    # must keep token batches FIFO (the throttle's non-overtaking lock)
+    tight = ResourceLimits(send_queue_depth=1, bounce_buffers=1, bounce_buffer_size=4_096)
+    assert run(True, limits=tight) == reference
+
+
+def test_serving_policy_ladder_delivers():
+    """The serving engine consumes ProgressPolicy.for_config like any
+    parcelport: the implicit (worker-polling) policy must serve the same
+    stream as the explicit default."""
+    arch, params = _smoke_model()
+    out = {}
+    for mode in ("explicit", "implicit"):
+        server = InferenceServer(
+            arch, params,
+            ServeConfig(slots=2, context=64, transport="collective", progress_mode=mode),
+        )
+        reqs = [server.submit([1, 2, 3], max_new=5), server.submit([4, 5], max_new=5)]
+        server.run_until_idle()
+        assert all(r.done_event.is_set() for r in reqs)
+        out[mode] = [r.out_tokens for r in reqs]
+    assert out["explicit"] == out["implicit"]
+
+
 def test_server_completes_requests_and_matches_reference():
     cfg = SMOKES["tinyllama-1.1b"].variant(dtype="float32")
     params = init_params(jax.random.PRNGKey(0), cfg)

@@ -123,6 +123,24 @@ def test_parity_trace_shape():
     assert all(e[1] == "rdv" for e in functional_trace("mpi") if e[0] == "send")
 
 
+# ------------------------------------ cross-backend engine parity (ISSUE 5)
+def test_collective_engine_parity_vs_lci_backend():
+    """Same engine, same config, DIFFERENT CommInterface backend: the
+    collective transport replays the LCI backend's decision trace bit for
+    bit (protocol path per send, header kind, chunk sequence, deliveries)
+    — the abstraction carries the protocol, the backend only moves bytes."""
+    assert functional_trace("collective") == functional_trace("sendrecv_queue")
+
+
+def test_collective_prg_family_delivers():
+    """Dedicated progress workers drive the collective backend too (the
+    collective_prg{n} family): real threads, full delivery."""
+    cfg = VARIANTS["collective_prg2"]
+    assert cfg.progress_workers == 2 and cfg.progress_mode == "implicit"
+    tr = functional_trace("collective_prg2")
+    assert tr.count(("deliver", 1)) == len(PARITY_SIZES)
+
+
 # ------------------------------------------------- policy / router units
 def test_policy_for_config_parity_across_layers():
     """ONE policy builder serves both layers: the functional LCIPPConfig
@@ -218,6 +236,30 @@ def test_lci_prg_family_resolves_and_delivers():
 def test_des_dedicated_progress_workers_deliver():
     r = flood("lci_prg2", msg_size=64, nthreads=8, nmsgs=300)
     assert r.messages == 300
+
+
+def test_prg_threads_join_on_close():
+    """Regression (ISSUE 5): the dedicated progress workers used to rely
+    on weakref finalization alone, leaking live daemon threads for as long
+    as the parcelport object survived.  close() must stop AND join them —
+    thread count stays flat over 50 create/destroy cycles."""
+    import threading
+
+    base = threading.active_count()
+    for _ in range(50):
+        world = World(2, make_parcelport_factory("lci_prg2"), devices_per_rank=2)
+        world.close()
+    assert threading.active_count() <= base + 1
+    # idempotent, and usable as a context manager
+    world = World(2, make_parcelport_factory("lci_prg2"), devices_per_rank=2)
+    pp = world.localities[0].parcelport
+    assert len(pp._pw_threads) == 2
+    with pp:
+        pass
+    assert pp._pw_threads == [] and pp._pw_stop.is_set()
+    pp.close()
+    world.close()
+    assert threading.active_count() <= base + 1
 
 
 def test_des_rejects_all_workers_dedicated():

@@ -34,6 +34,16 @@ fails on if it re-grows:
    ``_progress_device``), and ``_handle_completion`` may be called only
    from the engine's op driver.
 
+Since ISSUE 5 the gate also protects the serving stack's hand-off:
+
+5. **Serving rides the comm layer** — ``serve/server.py`` must hand
+   requests/responses through the shared abstraction (``CommChannel`` +
+   the one ``ProgressEngine`` via ``ProgressPolicy.for_config`` and
+   ``run_step``), and neither ``serve/``, ``launch/serve.py``, nor
+   ``core/executor.py`` may re-grow private send/recv hand-off machinery
+   (raw completion-queue construction, the MPI ``isend``/``irecv``
+   veneer, or hand-rolled ``_send_loop``/``_recv_loop`` pumps).
+
 Exit code is nonzero on any failure; failures are listed one per line.
 """
 from __future__ import annotations
@@ -173,10 +183,53 @@ def check_progress_engine(failures: list) -> None:
         )
 
 
+def check_serving_comm(failures: list) -> None:
+    """Gate 5: the serving stack's request/response hand-off goes through
+    the shared CommInterface, and private hand-off loops may not re-grow
+    in ``serve/``, ``launch/serve.py``, or the executor."""
+    src = REPO / "src" / "repro"
+    server_path = src / "serve" / "server.py"
+    exec_path = src / "core" / "executor.py"
+    server = server_path.read_text()
+    # 5a. the hand-off is built on the shared abstraction
+    for needle, why in (
+        ("CommChannel", "requests/responses must ride the comm layer's channel"),
+        ("ProgressEngine", "the engine loop must be the ONE shared ProgressEngine"),
+        ("ProgressPolicy.for_config", "the policy must come from the shared builder"),
+        ("run_step", "the serve loop must drive the engine's canonical step"),
+    ):
+        if needle not in server:
+            failures.append(f"src/repro/serve/server.py: {needle} missing — {why}")
+    if "run_step" not in exec_path.read_text():
+        failures.append(
+            "src/repro/core/executor.py: the idle pump does not drive the shared "
+            "engine (run_step) — opaque private pump re-grown?"
+        )
+    # 5b. no private hand-off machinery beside it (code lines only)
+    paths = sorted((src / "serve").glob("*.py")) + [exec_path, src / "launch" / "serve.py"]
+    for path in paths:
+        code = "\n".join(
+            line for line in path.read_text().splitlines()
+            if not line.lstrip().startswith("#")
+        )
+        for forbidden, why in (
+            ("LCRQueue(", "completion queues belong behind the comm layer"),
+            ("MichaelScottQueue(", "completion queues belong behind the comm layer"),
+            ("LockQueue(", "completion queues belong behind the comm layer"),
+            (".isend(", "the MPI veneer bypasses the unified interface"),
+            (".irecv(", "the MPI veneer bypasses the unified interface"),
+            ("_send_loop", "private send loop re-grown"),
+            ("_recv_loop", "private recv loop re-grown"),
+        ):
+            if forbidden in code:
+                failures.append(f"{path.relative_to(REPO)}: contains {forbidden} — {why}")
+
+
 def main() -> int:
     failures: list = []
     check_api(failures)
     check_progress_engine(failures)
+    check_serving_comm(failures)
     for f in failures:
         print(f"FAIL: {f}")
     print(f"check_api: {len(failures)} failure(s)")
