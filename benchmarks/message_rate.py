@@ -235,6 +235,71 @@ def collective_study() -> tuple:
     return rows, data, claims
 
 
+def capability_ladder(fast: bool = False) -> tuple:
+    """ISSUE 6: the paper's §3.3.1 capability ladder on ONE shared-memory
+    transport — two-sided emulation (``shmem``), true put-with-signal
+    (``shmem_put``), put + queue completion (``shmem_putq``) — same
+    protocol engine, selection purely by ``Capabilities``.  Functional
+    layer: every rung must deliver bit-identical payloads to ``lci`` at
+    every size, and the put rungs must genuinely ride one-sided puts
+    (header puts counted by the transport).  DES layer: 16-thread 8 B
+    flood rates must reproduce the ladder ordering — queue completion
+    beats the serialized signal scan beats tag matching."""
+    from repro.core.harness import deliver_payloads, transport_stats
+
+    rungs = ("shmem", "shmem_put", "shmem_putq")
+    sizes = (8, 600, 3000, 12288, 40960)
+    nparcels = 12
+    rows = []
+    parity: dict = {}
+    puts_per_parcel: dict = {}
+
+    def _arrived(variant: str, size: int):
+        world, got = deliver_payloads(
+            variant, [bytes([(i * 7 + size) % 251]) * size for i in range(nparcels)]
+        )
+        assert len(got) == nparcels, f"{variant}@{size}: {len(got)}/{nparcels}"
+        return world, sorted(a[0] for a in got)
+
+    for v in rungs:
+        per_size = {}
+        for size in sizes:
+            _, ref = _arrived("lci", size)
+            world, got = _arrived(v, size)
+            parity[(v, size)] = 1.0 if got == ref else 0.0
+            st = transport_stats(world)
+            per_size[size] = st.puts / nparcels
+        puts_per_parcel[v] = per_size
+        rows.append({"variant": v,
+                     **{f"{s}B" if s < 1024 else f"{s//1024}KiB": f"{per_size[s]:.2f}"
+                        for s in sizes}})
+    # DES: the rate ladder under a 16-thread short-message flood
+    nmsgs = 1200 if fast else 3000
+    rates = {v: flood(sim_config_for_variant(v), msg_size=8, nthreads=16, nmsgs=nmsgs).rate
+             for v in rungs}
+    for v in rungs:
+        rows.append({"variant": f"des:{v}@8B", "rate": f"{rates[v]/1e6:.2f}M/s"})
+    claims = [
+        Claim("§3.3.1", "ladder: put+queue-completion ≥ put-signal (DES rate)", 0.999,
+              rates["shmem_putq"] / max(rates["shmem_put"], 1e-9)),
+        Claim("§3.3.1", "ladder: put-signal ≥ two-sided emulation (DES rate)", 0.999,
+              rates["shmem_put"] / max(rates["shmem"], 1e-9)),
+        Claim("§3.3.1", "one-sided put ≥2x two-sided emulation, 16-thread flood", 2.0,
+              rates["shmem_putq"] / max(rates["shmem"], 1e-9)),
+        Claim("§2.3", "every shmem rung delivers bit-identical payloads to lci", 1.0,
+              min(parity.values())),
+        Claim("§3.3.1", "put rungs genuinely ride one-sided puts (≥1 header put/parcel)", 1.0,
+              min(min(puts_per_parcel[v].values()) for v in ("shmem_put", "shmem_putq"))),
+        Claim("§3.3.1", "the two-sided rung issues zero puts", 0.0,
+              max(puts_per_parcel["shmem"].values()), direction="<="),
+    ]
+    data = {"puts_per_parcel": {v: {str(s): p for s, p in d.items()}
+                                for v, d in puts_per_parcel.items()},
+            "delivery_parity_vs_lci": {f"{v}@{s}": p for (v, s), p in parity.items()},
+            "des_rates": rates}
+    return rows, data, claims
+
+
 def progress_contention(fast: bool = False, smoke: bool = False) -> tuple:
     """Progress-policy × worker-count ladder (paper §5.3 / §3.3.4) on the
     ONE shared ProgressEngine: worker-polling implicit, explicit lock-free,
@@ -330,6 +395,12 @@ def run(fast: bool = False) -> dict:
     print(table(c_rows, ["variant"] + [f"{s//1024}KiB" for s in EAGER_SWEEP_SIZES]
                 + ["messages", "delivered", "backpressure_events", "parks"],
                 "Collective backend vs lci/mpi (msgs/parcel, bounded hand-off, aggregation)"))
+    l_rows, l_data, l_claims = capability_ladder(fast=fast)
+    claims += l_claims
+    print(table(l_rows, ["variant"]
+                + [f"{s}B" if s < 1024 else f"{s//1024}KiB" for s in (8, 600, 3000, 12288, 40960)]
+                + ["rate"],
+                "Capability ladder on shmem (header puts/parcel + DES 8B flood rate)"))
     p_rows, p_data, p_claims = progress_contention(fast=fast)
     claims += p_claims
     print(table(p_rows, ["policy"] + [f"t{t}" for t in p_data["threads"]],
@@ -341,6 +412,7 @@ def run(fast: bool = False) -> dict:
                "crossover": {"rate_ratio_eager_over_rdv": {str(s): r for s, r in x_data["ratios"].items()}},
                "agg_threshold": a_stats,
                "collective": c_data,
+               "capability_ladder": l_data,
                "progress_contention": {"threads": p_data["threads"],
                                        "rates": {k: {str(t): r for t, r in v.items()}
                                                  for k, v in p_data["rates"].items()}},

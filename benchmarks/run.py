@@ -275,12 +275,15 @@ def main() -> int:
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true", help="tiny deterministic protocol-regression gate")
+    ap.add_argument("--claims-strict", action="store_true",
+                    help="non-zero exit if ANY claim is not REPRODUCED (the CI bench-claims gate)")
     args = ap.parse_args()
     if args.smoke:
         return smoke()
     names = list(BENCHMARKS) if not args.only else args.only.split(",")
     failures = []
     n_claims = n_ok = 0
+    not_reproduced: list = []
     for name in names:
         print(f"\n{'='*72}\n## {name}\n{'='*72}", flush=True)
         t0 = time.time()
@@ -289,11 +292,19 @@ def main() -> int:
             for c in (payload or {}).get("claims", []):
                 n_claims += 1
                 n_ok += c["status"] == "REPRODUCED"
+                if c["status"] != "REPRODUCED":
+                    not_reproduced.append(f"{name}/{c['figure']}: {c['claim']} "
+                                          f"(target {c['paper']}, achieved {c['achieved']})")
         except Exception:  # noqa: BLE001 - keep the suite running
             traceback.print_exc()
             failures.append(name)
         print(f"[{name}: {time.time()-t0:.1f}s]", flush=True)
     print(f"\n{'='*72}\nclaims reproduced: {n_ok}/{n_claims}; benchmark failures: {failures or 'none'}")
+    if args.claims_strict and not_reproduced:
+        print(f"\nclaims NOT reproduced ({len(not_reproduced)}):")
+        for line in not_reproduced:
+            print(f"  - {line}")
+        return 1
     return 1 if failures else 0
 
 

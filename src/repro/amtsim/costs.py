@@ -66,6 +66,12 @@ class Mechanisms:
     t_post_recv: float = 0.15 * US
     t_tag_match: float = 0.25 * US  # two-sided receive path (§3.3.1)
     t_put_deliver: float = 0.08 * US  # dynamic put: hand buffer to user
+    # put-signal completion (§3.3.1, the middle capability-ladder rung):
+    # the receiver discovers a completed put by testing raised per-slot
+    # signal flags — cheaper than tag matching, but the scan is a
+    # serialized sweep (charged under the match lock), unlike the
+    # lock-free queue-completion path above
+    t_put_signal: float = 0.05 * US
 
     # progress engine
     t_progress_poll: float = 0.12 * US  # one CQ poll sweep

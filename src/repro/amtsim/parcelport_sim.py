@@ -1003,10 +1003,22 @@ class SimWorld:
         if kind == "header":
             self._engine.record("header", "eager" if (msg.eager and not cfg.mpi) else "rdv")
             if cfg.header_mode == "put":
-                # dynamic put: no matching; buffer goes straight to the client
-                yield Timeout(mech.t_put_deliver)
-                yield from self._cq_cost(rank, "push", dev)
-                yield from self._cq_cost(rank, "pop", dev)
+                if cfg.header_comp == "sync":
+                    # put-signal (§3.3.1, the middle capability-ladder
+                    # rung): the receiver discovers the put by scanning
+                    # raised per-slot signal flags — no queue machinery,
+                    # but the scan is a serialized sweep (one discoverer
+                    # at a time), like the functional ShmemSegment's
+                    # claim_signals under the slab lock
+                    yield Acquire(rank.match_lock)
+                    yield Timeout(mech.t_put_signal + mech.t_sync_signal + mech.t_sync_test)
+                    rank.match_lock.release()
+                else:
+                    # put + queue-completion: no matching; the descriptor
+                    # goes straight into the client's completion ring
+                    yield Timeout(mech.t_put_deliver)
+                    yield from self._cq_cost(rank, "push", dev)
+                    yield from self._cq_cost(rank, "pop", dev)
             else:
                 # two-sided: the matching→signaling path is a sequential
                 # bottleneck (§3.3.1) — serialized, but with no futex storm

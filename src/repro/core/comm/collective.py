@@ -340,6 +340,12 @@ class CollectiveComm:
         the transport IS both), as in the LCI device."""
         return self.progress(max_completions)
 
+    def pending_transport(self) -> bool:
+        """Anything still moving through this endpoint: unexchanged
+        transits or unmatched arrivals (the base hook every channel-capable
+        backend exposes)."""
+        return bool(self._outbox or self._inbox)
+
     # --------------------------------------------------------------- matching
     def _match_incoming(self, src: int, tag: int, payload: bytes) -> None:
         with self._match_lock:
@@ -393,17 +399,42 @@ class CommChannel:
 
     PREPOST = 16
 
-    def __init__(self, limits: Optional[ResourceLimits] = None, stage: str = "loopback"):
+    def __init__(
+        self,
+        limits: Optional[ResourceLimits] = None,
+        stage: str = "loopback",
+        backend: str = "collective",
+    ):
         from ..completion import LCRQueue
 
+        assert backend in ("collective", "shmem"), backend
         self.limits = limits or ResourceLimits()
-        self.group = CollectiveGroup(2, 1, limits=self.limits, stage=stage)
+        if backend == "shmem":
+            # the true one-sided transport (same two-rank topology)
+            from .shmem import ShmemGroup
+
+            self.group: Any = ShmemGroup(2, 1, limits=self.limits, completion_mode="queue")
+        else:
+            self.group = CollectiveGroup(2, 1, limits=self.limits, stage=stage)
         self.client = self.group.endpoint(0, 0)
         self.server = self.group.endpoint(1, 0)
         self.request_cq = LCRQueue()  # server-side: arrived requests
         self.response_cq = LCRQueue()  # client-side: arrived token batches
         self._client_throttle = InjectionThrottle(self.limits.retry_budget)
         self._server_throttle = InjectionThrottle(self.limits.retry_budget)
+        # Register the router-owned landing queues as put targets where the
+        # backend takes one — what makes ``one_sided_put`` honest (a put
+        # needs somewhere to complete, exactly like the LCI device's
+        # put_target_comp): responses land in the client's response queue,
+        # requests would land in the server's request queue.
+        for ep, landing in ((self.client, self.response_cq), (self.server, self.request_cq)):
+            if hasattr(ep, "put_target_comp"):
+                ep.put_target_comp = landing
+        # ISSUE 6 re-target, selected PURELY by Capabilities (never by
+        # backend name/type): when the transport advertises one-sided put,
+        # responses ride put straight into the router-owned response queue
+        # — no tag, no matching, no pre-posted receive consumed (§3.3.1).
+        self._put_responses = self.server.capabilities.one_sided_put
         for _ in range(self.PREPOST):
             self.server.post_recv(-1, TAG_REQUEST, self.request_cq, ctx="request")
             self.client.post_recv(-1, TAG_RESPONSE, self.response_cq, ctx="response")
@@ -421,8 +452,18 @@ class CommChannel:
         )
 
     def send_response(self, payload: bytes) -> None:
-        """Server → client; parks on EAGAIN, retried by the engine step."""
+        """Server → client; parks on EAGAIN, retried by the engine step.
+
+        With a put-capable backend (``self._put_responses``, from the
+        Capabilities alone) the token batch rides one-sided put into the
+        client's router-owned response queue; otherwise the two-sided
+        tagged path."""
         eager = self._eager(payload)
+        if self._put_responses:
+            self._server_throttle.post_or_park(
+                lambda: self.server.post_put_signal(0, 0, payload, self.request_cq, ctx="sent", eager=eager)
+            )
+            return
         self._server_throttle.post_or_park(
             lambda: self.server.post_send(0, 0, TAG_RESPONSE, payload, self.request_cq, ctx="sent", eager=eager)
         )
@@ -461,15 +502,14 @@ class CommChannel:
             self.client.post_recv(-1, TAG_RESPONSE, self.response_cq, ctx="response")
 
     def pending_work(self) -> bool:
-        """Anything still moving: parked posts, unexchanged transits,
-        unmatched arrivals, or unreaped completions."""
+        """Anything still moving: parked posts, in-flight transport work
+        (the backend's ``pending_transport`` hook), or unreaped
+        completions."""
         return bool(
             self._client_throttle
             or self._server_throttle
-            or self.client._outbox
-            or self.server._outbox
-            or self.client._inbox
-            or self.server._inbox
+            or self.client.pending_transport()
+            or self.server.pending_transport()
             or len(self.request_cq)
             or len(self.response_cq)
         )

@@ -18,10 +18,14 @@ __all__ = ["deliver_payloads", "transport_stats"]
 def transport_stats(world: "World"):
     """The stats of whichever transport actually carried the bytes: the
     collective group's when the variant rode the JAX-collectives backend,
-    the fabric's otherwise.  Both share the ``FabricStats`` shape, so
-    benchmark code reads either through this one accessor."""
-    group = getattr(world.fabric, "_collective_group", None)
-    return group.stats if group is not None else world.fabric.stats
+    the shmem group's on the shared-memory backend, the fabric's
+    otherwise.  All share the ``FabricStats`` shape, so benchmark code
+    reads any transport through this one accessor."""
+    for attr in ("_collective_group", "_shmem_group"):
+        group = getattr(world.fabric, attr, None)
+        if group is not None:
+            return group.stats
+    return world.fabric.stats
 
 
 def deliver_payloads(

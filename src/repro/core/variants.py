@@ -130,6 +130,19 @@ _FIXED = {
     # devices.  No one-sided put, so headers ride two-sided send/recv BY
     # CAPABILITY — the config states the honest path up front.
     "collective": lambda: LCIPPConfig(name="collective", header_mode="sendrecv", header_comp="queue"),
+    # The shared-memory backend (ISSUE 6): the one transport with a TRUE
+    # one-sided put, run at every rung of the paper's capability ladder
+    # (§3.3.1).  The three rungs reuse the shared header_mode/header_comp
+    # axes, so the DES resolves them with no new config fields:
+    #   shmem      — two-sided emulation over the same receiver-owned slots;
+    #   shmem_put  — put-signal: raised per-slot flags, discovered by a
+    #                serialized scan (header_comp='sync');
+    #   shmem_putq — put + queue-completion: descriptors enqueued straight
+    #                into the receiver's completion ring (the paper's
+    #                preferred primitive).
+    "shmem": lambda: LCIPPConfig(name="shmem", header_mode="sendrecv", header_comp="queue"),
+    "shmem_put": lambda: LCIPPConfig(name="shmem_put", header_mode="put", header_comp="sync"),
+    "shmem_putq": lambda: LCIPPConfig(name="shmem_putq", header_mode="put", header_comp="queue"),
 }
 for _name, _build in _FIXED.items():
     REGISTRY.register(_name, _build)
@@ -185,6 +198,21 @@ REGISTRY.register_family(VariantSpec(
     ),
     canonical=((2,),),
     doc="collective backend with {n} dedicated progress workers",
+))
+# shmem-backend progress family: put + queue-completion (the top ladder
+# rung) under n dedicated progress workers — the shared-memory transport's
+# progress-policy axis, mirroring lci_prg{n}/collective_prg{n}.
+REGISTRY.register_family(VariantSpec(
+    grammar="shmem_prg{n}",
+    build=lambda name, n: LCIPPConfig(
+        name=name,
+        header_mode="put",
+        header_comp="queue",
+        progress_workers=n,
+        progress_mode="explicit" if n == 0 else "implicit",
+    ),
+    canonical=((2,),),
+    doc="shared-memory put+queue backend with {n} dedicated progress workers",
 ))
 # bounded-injection family (§3.3.4, ROADMAP follow-up): finite send ring +
 # bounce pool, both `depth` deep, through the shared resource model.
@@ -242,4 +270,9 @@ def make_parcelport_factory(name: str) -> Callable[[Locality, Fabric], Parcelpor
         from .comm.collective import CollectiveParcelport
 
         return lambda loc, fab: CollectiveParcelport(loc, fab, cfg)
+    if name.startswith("shmem"):
+        # the shared-memory backend (the true one-sided put transport)
+        from .comm.shmem import ShmemParcelport
+
+        return lambda loc, fab: ShmemParcelport(loc, fab, cfg)
     return lambda loc, fab: LCIParcelport(loc, fab, cfg)

@@ -52,8 +52,11 @@ class ServeConfig:
     max_prefill: int = 64  # prompt length bucket (padded)
     greedy: bool = True
     # Request/response hand-off: 'collective' rides CommInterface verbs on
-    # a CollectiveComm pair driven by the shared ProgressEngine; 'inline'
-    # is the legacy direct hand-off (the parity reference in tests).
+    # a CollectiveComm pair driven by the shared ProgressEngine; 'shmem'
+    # swaps in the true one-sided shared-memory transport (responses ride
+    # put into the router-owned response queue whenever the backend's
+    # Capabilities advertise one_sided_put — ISSUE 6); 'inline' is the
+    # legacy direct hand-off (the parity reference in tests).
     transport: str = "collective"
     # ProgressPolicy.for_config axes — the same fields, by design, as
     # LCIPPConfig and the DES SimConfig: the serving hot path sweeps the
@@ -109,8 +112,8 @@ class InferenceServer:
         self._inflight: Dict[int, Request] = {}  # rid -> client-side Request
         self._inflight_lock = threading.Lock()
         self._outbox: List[tuple] = []  # (rid, tok, done) batch of one step
-        if cfg.transport == "collective":
-            self._channel = CommChannel(limits=cfg.limits)
+        if cfg.transport in ("collective", "shmem"):
+            self._channel = CommChannel(limits=cfg.limits, backend=cfg.transport)
             # step_lock=True: the whole engine step runs behind a try-lock
             # (implemented in `execute`), so a second driver — e.g.
             # AMTExecutor(comm=server) pumping from idle workers — can

@@ -36,7 +36,8 @@ from repro.core.variants import VARIANTS, make_parcelport_factory, variant_names
 
 REPO = Path(__file__).resolve().parent.parent
 
-PARITY_VARIANTS = ["mpi", "mpi_a", "lci", "lci_agg_eager", "collective"]
+PARITY_VARIANTS = ["mpi", "mpi_a", "lci", "lci_agg_eager", "collective",
+                   "shmem", "shmem_put", "shmem_putq"]
 PARITY_PAYLOADS = [bytes([i % 251]) * (7 + 311 * i % 20_000) for i in range(40)]
 
 
@@ -360,4 +361,13 @@ def test_check_api_serving_gate_green():
     serve/, launch/serve.py, or the executor."""
     failures: list = []
     _load_check_api().check_serving_comm(failures)
+    assert not failures, failures
+
+
+def test_check_api_put_capability_gate_green():
+    """Gate 6 (ISSUE 6): outside the comm backends, nothing selects the
+    one-sided put path by concrete backend type — only by the advertised
+    Capabilities."""
+    failures: list = []
+    _load_check_api().check_put_capability(failures)
     assert not failures, failures

@@ -133,6 +133,26 @@ def test_serving_roundtrip_parity_inline_vs_collective():
     assert server._channel.group.stats.messages > 0
 
 
+def test_serving_shmem_responses_ride_put_into_router_slots():
+    """ISSUE 6: with the put-capable shmem backend the SAME request stream
+    produces identical responses, token batches ride one-sided put into
+    the router-owned response queue, and the path is selected purely by
+    the advertised Capabilities — never by backend name or type."""
+    inline, _ = _run_stream("inline")
+    shmem, server = _run_stream("shmem")
+    assert inline == shmem
+    ch = server._channel
+    assert ch._put_responses  # = server endpoint's capabilities.one_sided_put
+    assert ch.server.capabilities.one_sided_put
+    assert ch.group.stats.puts > 0  # responses genuinely rode put
+    # requests stay two-sided (tagged sends), so both verbs carried traffic
+    assert ch.group.stats.sends > 0
+    # the collective backend advertises no put: same channel code, two-sided
+    _, coll = _run_stream("collective")
+    assert not coll._channel._put_responses
+    assert coll._channel.group.stats.puts == 0
+
+
 def test_serving_collective_backpressure_throttles_not_loses():
     """A tightly bounded hand-off channel must surface EAGAIN (parked
     posts) AND still complete every request — the §3.3.4 throttle on the

@@ -45,7 +45,8 @@ from repro.core.variants import VARIANTS, make_parcelport_factory, max_devices
 # 12 KiB (straddles nothing: rdv for 8 KiB thresholds, eager for 16 KiB),
 # 40 KiB (rendezvous with exactly one follow-up everywhere).
 PARITY_SIZES = (64, 12_000, 40_000)
-PARITY_VARIANTS = ("lci", "lci_agg_eager", "mpi", "lci_prg2")
+PARITY_VARIANTS = ("lci", "lci_agg_eager", "mpi", "lci_prg2",
+                   "shmem", "shmem_put", "shmem_putq", "shmem_prg2")
 
 
 def functional_trace(variant: str, sizes=PARITY_SIZES) -> list:
@@ -130,6 +131,17 @@ def test_collective_engine_parity_vs_lci_backend():
     bit (protocol path per send, header kind, chunk sequence, deliveries)
     — the abstraction carries the protocol, the backend only moves bytes."""
     assert functional_trace("collective") == functional_trace("sendrecv_queue")
+
+
+def test_shmem_ladder_engine_parity_vs_lci_backend():
+    """ISSUE 6, cross-backend: the shared-memory transport replays the LCI
+    backend's decision traces bit for bit at every capability rung — the
+    two-sided rung matches the two-sided LCI config, and BOTH put rungs
+    match the put-capable LCI default (the rungs differ only in how a
+    completed put is discovered, which is below the engine's trace)."""
+    assert functional_trace("shmem") == functional_trace("sendrecv_queue")
+    assert functional_trace("shmem_put") == functional_trace("lci")
+    assert functional_trace("shmem_putq") == functional_trace("lci")
 
 
 def test_collective_prg_family_delivers():

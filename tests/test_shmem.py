@@ -1,0 +1,283 @@
+"""The shared-memory transport (ISSUE 6): a TRUE one-sided put backend.
+
+Covers the backend×verb conformance matrix (every CommInterface backend
+completes each of the five verbs or raises UnsupportedCapabilityError
+exactly per its advertised Capabilities), the slab mechanics (bytes
+genuinely staged through the one shared buffer, receiver-owned slot
+accounting with typed EAGAIN, both completion modes, both backings,
+oversize rejection), the shared resource model on the shmem parcelport,
+and the capability-ladder variant wiring.
+"""
+import pytest
+
+from repro.core.comm import (
+    CommInterface,
+    PostStatus,
+    ResourceLimits,
+    UnsupportedCapabilityError,
+)
+from repro.core.comm.collective import CollectiveGroup
+from repro.core.comm.shmem import DEFAULT_SLOTS, ShmemComm, ShmemGroup
+from repro.core.completion import LCRQueue
+from repro.core.device import LCIDevice
+from repro.core.fabric import Fabric
+from repro.core.harness import deliver_payloads, transport_stats
+from repro.core.mpi_sim import MPISim
+from repro.core.variants import VARIANTS, variant_names
+
+
+# ------------------------------------------------- backend builders (matrix)
+def _mk_lci():
+    fab = Fabric(2, devices_per_rank=1)
+    cq0, cq1 = LCRQueue(), LCRQueue()
+    a = LCIDevice(fab.device(0, 0), put_target_comp=cq0)
+    b = LCIDevice(fab.device(1, 0), put_target_comp=cq1)
+    return a, b, cq1
+
+
+def _mk_mpi():
+    fab = Fabric(2, devices_per_rank=1)
+    return MPISim(fab, 0), MPISim(fab, 1), None
+
+
+def _mk_collective():
+    grp = CollectiveGroup(2)
+    return grp.endpoint(0), grp.endpoint(1), None
+
+
+def _mk_shmem(completion_mode):
+    grp = ShmemGroup(2, completion_mode=completion_mode)
+    a, b = grp.endpoint(0), grp.endpoint(1)
+    a.put_target_comp = LCRQueue()
+    b.put_target_comp = LCRQueue()
+    return a, b, b.put_target_comp
+
+
+BACKENDS = {
+    "lci": _mk_lci,
+    "mpi": _mk_mpi,
+    "collective": _mk_collective,
+    "shmem_queue": lambda: _mk_shmem("queue"),
+    "shmem_signal": lambda: _mk_shmem("signal"),
+}
+
+
+def _drive(*ends, rounds=50):
+    for _ in range(rounds):
+        if not any(e.progress() for e in ends):
+            return
+
+
+@pytest.mark.parametrize("name", sorted(BACKENDS))
+def test_backend_verb_conformance_matrix(name):
+    """The conformance contract: each backend either completes a verb or
+    raises UnsupportedCapabilityError, exactly as its Capabilities say —
+    never a silent no-op, never an undeclared success."""
+    a, b, put_landing = BACKENDS[name]()
+    assert isinstance(a, CommInterface) and isinstance(b, CommInterface)
+    caps = a.capabilities
+
+    # post_recv + post_send: the two-sided pair every backend must carry
+    got = LCRQueue()
+    sent = LCRQueue()
+    b.post_recv(-1, 7, got, ctx="rx")
+    assert a.post_send(1, 0, 7, b"hello", sent, ctx="tx") is PostStatus.OK
+    _drive(a, b)
+    rec = got.reap()
+    assert rec is not None and rec.data == b"hello" and rec.src_rank == 0
+    assert sent.reap() is not None  # the local send completion surfaced
+
+    # post_put_signal: completes iff one_sided_put is advertised
+    if caps.one_sided_put:
+        comp = LCRQueue()
+        assert a.post_put_signal(1, 0, b"put-bytes", comp, ctx="put") is PostStatus.OK
+        _drive(a, b)
+        landed = put_landing.reap()
+        assert landed is not None and landed.data == b"put-bytes"
+        assert landed.src_rank == 0
+        assert comp.reap() is not None  # local injection completion
+    else:
+        with pytest.raises(UnsupportedCapabilityError):
+            a.post_put_signal(1, 0, b"put-bytes", LCRQueue())
+
+    # progress + poll: every backend exposes both driving verbs, and a
+    # quiesced endpoint reports no movement
+    assert a.progress() in (True, False)
+    assert a.poll() in (True, False)
+    assert b.progress() is False and b.poll() is False
+
+
+def test_matrix_capabilities_are_the_advertised_ladder():
+    """The matrix rows advertise exactly the capability set the paper's
+    ladder assigns them (§2.3/§3.3.1)."""
+    for name, one_sided in (("lci", True), ("mpi", False), ("collective", False),
+                            ("shmem_queue", True), ("shmem_signal", True)):
+        a, _b, _ = BACKENDS[name]()
+        assert a.capabilities.one_sided_put is one_sided, name
+
+
+# ----------------------------------------------------------- slab mechanics
+def test_put_bytes_genuinely_stage_through_shared_slab():
+    """The tentpole property: the payload bytes are IN the receiver-owned
+    shared slab before the receiver ever runs — a real one-sided store,
+    not a Python-object hand-off."""
+    grp = ShmemGroup(2, completion_mode="queue")
+    a, b = grp.endpoint(0), grp.endpoint(1)
+    a.put_target_comp = LCRQueue()
+    b.put_target_comp = LCRQueue()
+    payload = bytes(range(256)) * 4
+    assert a.post_put_signal(1, 0, payload, LCRQueue()) is PostStatus.OK
+    # receiver has NOT progressed: read the slab directly
+    seg = grp.segments[(1, 0)]
+    assert seg.pending()
+    kind, src, src_dev, tag, stored = seg.read(0)  # first allocated slot
+    assert stored == payload and src == 0
+    # now the receiver consumes the very same slot
+    b.progress()
+    rec = b.put_target_comp.reap()
+    assert rec.data == payload and rec.op == "put_recv"
+    assert seg.free_slots() == grp.nslots  # slot returned to the pool
+
+
+def test_put_slot_exhaustion_surfaces_eagain_buffer():
+    """Receiver-owned slot accounting from the shared ResourceLimits: an
+    exhausted remote slab refuses the put with EAGAIN_BUFFER (and counts
+    backpressure); the receiver's progress frees slots and the post then
+    succeeds — throttled, never lost."""
+    lim = ResourceLimits(recv_slots=2, bounce_buffer_size=1024)
+    grp = ShmemGroup(2, limits=lim, completion_mode="queue")
+    a, b = grp.endpoint(0), grp.endpoint(1)
+    a.put_target_comp = LCRQueue()
+    b.put_target_comp = LCRQueue()
+    assert grp.nslots == 2
+    assert a.post_put_signal(1, 0, b"one", LCRQueue()) is PostStatus.OK
+    assert a.post_put_signal(1, 0, b"two", LCRQueue()) is PostStatus.OK
+    assert a.post_put_signal(1, 0, b"three", LCRQueue()) is PostStatus.EAGAIN_BUFFER
+    assert grp.stats.backpressure_events == 1
+    b.progress()  # consume both slots
+    assert a.post_put_signal(1, 0, b"three", LCRQueue()) is PostStatus.OK
+    _drive(a, b)
+    assert [b.put_target_comp.reap().data for _ in range(3)] == [b"one", b"two", b"three"]
+
+
+def test_put_ring_exhaustion_surfaces_eagain_queue():
+    """A full local injection ring is a DIFFERENT refusal than an
+    exhausted remote slab, exactly as on the fabric-backed device."""
+    lim = ResourceLimits(send_queue_depth=1, bounce_buffer_size=1024)
+    grp = ShmemGroup(2, limits=lim, completion_mode="queue")
+    a, b = grp.endpoint(0), grp.endpoint(1)
+    a.put_target_comp = LCRQueue()
+    b.put_target_comp = LCRQueue()
+    assert a.capabilities.bounded_injection
+    assert a.post_put_signal(1, 0, b"x", LCRQueue()) is PostStatus.OK
+    assert a.post_put_signal(1, 0, b"y", LCRQueue()) is PostStatus.EAGAIN_QUEUE
+    a.progress()  # the local completion frees the ring slot
+    assert a.post_put_signal(1, 0, b"y", LCRQueue()) is PostStatus.OK
+
+
+def test_signal_mode_discovers_puts_by_scanning():
+    """Put-signal rung: commits raise the per-slot flag in the slab, and
+    the receiver's progress claims them by scanning — no descriptor ever
+    enters the ring."""
+    grp = ShmemGroup(2, completion_mode="signal")
+    a, b = grp.endpoint(0), grp.endpoint(1)
+    a.put_target_comp = LCRQueue()
+    b.put_target_comp = LCRQueue()
+    a.post_put_signal(1, 0, b"sig", LCRQueue())
+    seg = grp.segments[(1, 0)]
+    assert seg.pop_announced() is None  # nothing in the descriptor ring
+    assert seg.buf[0] == 2  # _ST_SIG raised in the shared state array
+    b.progress()
+    assert b.put_target_comp.reap().data == b"sig"
+
+
+def test_oversized_message_rejected_with_valueerror():
+    grp = ShmemGroup(2, limits=ResourceLimits(bounce_buffer_size=64))
+    a = grp.endpoint(0)
+    a.put_target_comp = LCRQueue()
+    with pytest.raises(ValueError, match="slot capacity"):
+        a.post_put_signal(1, 0, b"z" * 65, LCRQueue())
+    with pytest.raises(ValueError, match="slot capacity"):
+        a.post_send(1, 0, 3, b"z" * 65, LCRQueue())
+
+
+def test_put_without_registered_target_is_uncapable():
+    grp = ShmemGroup(2)
+    a = grp.endpoint(0)
+    assert not a.capabilities.one_sided_put
+    with pytest.raises(UnsupportedCapabilityError):
+        a.post_put_signal(1, 0, b"x", LCRQueue())
+
+
+def test_shm_backing_roundtrip_and_explicit_close():
+    """The named-POSIX-segment backing: same slab semantics, released by
+    the explicit close (idempotent; the weakref finalizer is only the GC
+    backstop)."""
+    grp = ShmemGroup(2, limits=ResourceLimits(recv_slots=4, bounce_buffer_size=256),
+                     backing="shm")
+    a, b = grp.endpoint(0), grp.endpoint(1)
+    a.put_target_comp = LCRQueue()
+    b.put_target_comp = LCRQueue()
+    payload = b"\xa5" * 200
+    assert a.post_put_signal(1, 0, payload, LCRQueue()) is PostStatus.OK
+    b.progress()
+    assert b.put_target_comp.reap().data == payload
+    _drive(a, b)
+    grp.close()
+    grp.close()  # idempotent
+    for seg in grp.segments.values():
+        assert seg._closed
+
+
+# -------------------------------------------- parcelport / variant wiring
+def test_shmem_variants_registered_with_ladder_configs():
+    """The rungs map onto the EXISTING config axes — no new fields, so the
+    DES inherits them through sim_config_for_variant unchanged."""
+    assert VARIANTS["shmem"].header_mode == "sendrecv"
+    assert VARIANTS["shmem"].header_comp == "queue"
+    assert VARIANTS["shmem_put"].header_mode == "put"
+    assert VARIANTS["shmem_put"].header_comp == "sync"
+    assert VARIANTS["shmem_putq"].header_mode == "put"
+    assert VARIANTS["shmem_putq"].header_comp == "queue"
+    assert VARIANTS["shmem_prg2"].progress_workers == 2
+    assert {"shmem", "shmem_put", "shmem_putq", "shmem_prg2"} <= set(variant_names())
+
+
+def test_shmem_parcelport_shares_resource_model():
+    """variant delivery over the shmem transport under a tight shared
+    ResourceLimits: the one ShmemGroup of the world draws the fabric's
+    limits, backpressures, and still delivers everything."""
+    lim = ResourceLimits(send_queue_depth=2, bounce_buffers=2, bounce_buffer_size=65_536)
+    world, got = deliver_payloads("shmem_putq", [bytes([i]) * 600 for i in range(30)],
+                                  fabric_kwargs={"limits": lim})
+    assert len(got) == 30
+    group = world.fabric._shmem_group
+    assert group.limits is lim
+    st = transport_stats(world)
+    assert st is group.stats
+    assert st.puts > 0  # headers genuinely rode one-sided puts
+    assert st.backpressure_events > 0  # the bound actually bit
+
+
+def test_shmem_two_sided_rung_issues_no_puts():
+    world, got = deliver_payloads("shmem", [bytes([i]) * 600 for i in range(10)])
+    assert len(got) == 10
+    st = transport_stats(world)
+    assert st.puts == 0 and st.sends > 0
+
+
+def test_one_group_per_world_and_completion_mode_pinned():
+    """shmem_group_for keys the group on the fabric and refuses a second
+    completion mode — one world, one discovery discipline."""
+    from repro.core.comm.shmem import shmem_group_for
+
+    fab = Fabric(2)
+    g1 = shmem_group_for(fab, completion_mode="queue")
+    assert shmem_group_for(fab, completion_mode="queue") is g1
+    with pytest.raises(AssertionError, match="one completion mode"):
+        shmem_group_for(fab, completion_mode="signal")
+
+
+def test_default_slot_count_matches_device_prepost_depth():
+    assert ShmemGroup(2).nslots == DEFAULT_SLOTS
+    assert isinstance(ShmemGroup(2).endpoint(0), ShmemComm)

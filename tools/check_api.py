@@ -44,6 +44,19 @@ Since ISSUE 5 the gate also protects the serving stack's hand-off:
    (raw completion-queue construction, the MPI ``isend``/``irecv``
    veneer, or hand-rolled ``_send_loop``/``_recv_loop`` pumps).
 
+Since ISSUE 6 the gate also protects the capability ladder's selection
+surface:
+
+6. **Put-path selection is capability-driven only** — outside the comm
+   backends themselves (``core/comm/``, ``core/device.py``,
+   ``core/mpi_sim.py``), no code line may branch on a backend's concrete
+   type (``isinstance`` against ``LCIDevice`` / ``ShmemComm`` /
+   ``CollectiveComm`` / ``MPISim``), and any file that posts a one-sided
+   put (``.post_put_signal(``) must consult ``one_sided_put`` from the
+   advertised ``Capabilities`` — the paper's point (§2.3) is that the
+   protocol engine selects paths from what the transport *advertises*,
+   never from what it *is*.
+
 Exit code is nonzero on any failure; failures are listed one per line.
 """
 from __future__ import annotations
@@ -225,11 +238,44 @@ def check_serving_comm(failures: list) -> None:
                 failures.append(f"{path.relative_to(REPO)}: contains {forbidden} — {why}")
 
 
+def check_put_capability(failures: list) -> None:
+    """Gate 6: one-sided-put path selection rides the advertised
+    ``Capabilities`` alone — never the backend's concrete type."""
+    src = REPO / "src" / "repro"
+    comm_dir = src / "core" / "comm"
+    # backends may inspect their own concrete types; everyone else selects
+    # by Capabilities
+    allowed = {src / "core" / "device.py", src / "core" / "mpi_sim.py"}
+    backend_names = ("LCIDevice", "ShmemComm", "ShmemDevice", "CollectiveComm", "MPISim")
+    for path in sorted(src.rglob("*.py")):
+        if comm_dir in path.parents or path in allowed:
+            continue
+        code_lines = [
+            line for line in path.read_text().splitlines()
+            if not line.lstrip().startswith("#")
+        ]
+        for line in code_lines:
+            if "isinstance(" in line and any(n in line for n in backend_names):
+                failures.append(
+                    f"{path.relative_to(REPO)}: isinstance() against a concrete "
+                    f"comm backend ({line.strip()!r}) — select the put path from "
+                    "capabilities.one_sided_put, not the backend type"
+                )
+        code = "\n".join(code_lines)
+        if ".post_put_signal(" in code and "one_sided_put" not in code:
+            failures.append(
+                f"{path.relative_to(REPO)}: posts one-sided puts without "
+                "consulting capabilities.one_sided_put — the put path must be "
+                "selected by the advertised Capabilities"
+            )
+
+
 def main() -> int:
     failures: list = []
     check_api(failures)
     check_progress_engine(failures)
     check_serving_comm(failures)
+    check_put_capability(failures)
     for f in failures:
         print(f"FAIL: {f}")
     print(f"check_api: {len(failures)} failure(s)")
