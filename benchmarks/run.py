@@ -263,6 +263,50 @@ def smoke() -> int:
         traceback.print_exc()
         failures.append(f"collective_pair: {exc}")
 
+    # 9. the serving fleet (ISSUE 7): every registered fleet variant must
+    # emit token streams identical to the single-host reference on a tiny
+    # trace, with zero dropped requests
+    try:
+        import jax
+
+        from repro.configs import SMOKES
+        from repro.core.variants import fleet_variant_names, make_fleet_config
+        from repro.models import init_params
+        from repro.serve import Fleet, InferenceServer, ServeConfig
+
+        arch = SMOKES["tinyllama-1.1b"].variant(dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), arch)
+        trace = [([1, 2, 3], 3), ([4, 5, 6, 7], 4), ([8, 9], 3)]
+        single = InferenceServer(arch, params,
+                                 ServeConfig(slots=4, context=64, transport="inline"))
+        ref_reqs = [single.submit(p, max_new=m) for p, m in trace]
+        single.run_until_idle()
+        ref = [r.out_tokens for r in ref_reqs]
+        results["fleet"] = {}
+        for name in fleet_variant_names():
+            import dataclasses
+
+            cfg = dataclasses.replace(make_fleet_config(name), slots=4, context=64)
+            fleet = Fleet(arch, params, cfg)
+            try:
+                reqs = [fleet.submit(p, max_new=m) for p, m in trace]
+                fleet.run_until_idle()
+                out = [r.out_tokens for r in reqs]
+                results["fleet"][name] = {
+                    "workers": cfg.workers, "eagain": fleet.eagain_events,
+                    "completed": fleet.completed,
+                }
+                if not all(r.done_event.is_set() for r in reqs):
+                    raise RuntimeError(f"fleet {name} dropped requests")
+                if out != ref:
+                    raise RuntimeError(f"fleet {name} diverged from single-host")
+            finally:
+                fleet.close()
+            print(f"smoke fleet {name:16s} ok  (w={cfg.workers}, == single-host)")
+    except Exception as exc:  # noqa: BLE001
+        traceback.print_exc()
+        failures.append(f"fleet: {exc}")
+
     results["failures"] = failures
     results["elapsed"] = time.time() - t0
     save_result("smoke", results)

@@ -395,7 +395,16 @@ class CommChannel:
     transport refuses park in per-direction
     :class:`~repro.core.comm.base.InjectionThrottle`\\ s and retry under
     the shared ``limits.retry_budget`` — the serving hot path gets the
-    SAME backpressure/throttle behaviour as the parcelport study."""
+    SAME backpressure/throttle behaviour as the parcelport study.
+
+    **Multi-endpoint registration (ISSUE 7):** the fleet runs N of these
+    channels over ONE shared group — pass ``group`` plus explicit
+    ``client_rank`` / ``server_rank``, and a shared ``response_cq`` so
+    every worker's token batches land in the SAME router-owned queue
+    (rank ``client_rank``'s slab is genuinely the router-owned slot space
+    on put-capable backends).  Put-target registration on the shared
+    client endpoint is idempotent: every channel must bind the same
+    landing queue, never silently rebind it."""
 
     PREPOST = 16
 
@@ -404,22 +413,31 @@ class CommChannel:
         limits: Optional[ResourceLimits] = None,
         stage: str = "loopback",
         backend: str = "collective",
+        group: Any = None,
+        client_rank: int = 0,
+        server_rank: int = 1,
+        response_cq: Any = None,
     ):
         from ..completion import LCRQueue
 
         assert backend in ("collective", "shmem"), backend
         self.limits = limits or ResourceLimits()
-        if backend == "shmem":
+        if group is not None:
+            self.group = group  # fleet: N channels share one group
+        elif backend == "shmem":
             # the true one-sided transport (same two-rank topology)
             from .shmem import ShmemGroup
 
             self.group: Any = ShmemGroup(2, 1, limits=self.limits, completion_mode="queue")
         else:
             self.group = CollectiveGroup(2, 1, limits=self.limits, stage=stage)
-        self.client = self.group.endpoint(0, 0)
-        self.server = self.group.endpoint(1, 0)
+        self.client_rank, self.server_rank = client_rank, server_rank
+        self.client = self.group.endpoint(client_rank, 0)
+        self.server = self.group.endpoint(server_rank, 0)
         self.request_cq = LCRQueue()  # server-side: arrived requests
-        self.response_cq = LCRQueue()  # client-side: arrived token batches
+        # client-side: arrived token batches — shared across a fleet's
+        # channels when the router passes its own landing queue in
+        self.response_cq = LCRQueue() if response_cq is None else response_cq
         self._client_throttle = InjectionThrottle(self.limits.retry_budget)
         self._server_throttle = InjectionThrottle(self.limits.retry_budget)
         # Register the router-owned landing queues as put targets where the
@@ -429,6 +447,11 @@ class CommChannel:
         # requests would land in the server's request queue.
         for ep, landing in ((self.client, self.response_cq), (self.server, self.request_cq)):
             if hasattr(ep, "put_target_comp"):
+                prev = ep.put_target_comp
+                assert prev is None or prev is landing, (
+                    "endpoint already bound to a different put landing queue "
+                    "(fleet channels must share the router's response_cq)"
+                )
                 ep.put_target_comp = landing
         # ISSUE 6 re-target, selected PURELY by Capabilities (never by
         # backend name/type): when the transport advertises one-sided put,
@@ -448,7 +471,7 @@ class CommChannel:
         """Client → server; parks on EAGAIN, retried by the engine step."""
         eager = self._eager(payload)
         self._client_throttle.post_or_park(
-            lambda: self.client.post_send(1, 0, TAG_REQUEST, payload, self.response_cq, ctx="sent", eager=eager)
+            lambda: self.client.post_send(self.server_rank, 0, TAG_REQUEST, payload, self.response_cq, ctx="sent", eager=eager)
         )
 
     def send_response(self, payload: bytes) -> None:
@@ -461,11 +484,11 @@ class CommChannel:
         eager = self._eager(payload)
         if self._put_responses:
             self._server_throttle.post_or_park(
-                lambda: self.server.post_put_signal(0, 0, payload, self.request_cq, ctx="sent", eager=eager)
+                lambda: self.server.post_put_signal(self.client_rank, 0, payload, self.request_cq, ctx="sent", eager=eager)
             )
             return
         self._server_throttle.post_or_park(
-            lambda: self.server.post_send(0, 0, TAG_RESPONSE, payload, self.request_cq, ctx="sent", eager=eager)
+            lambda: self.server.post_send(self.client_rank, 0, TAG_RESPONSE, payload, self.request_cq, ctx="sent", eager=eager)
         )
 
     # -- the engine's op surface --------------------------------------------

@@ -72,6 +72,7 @@ __all__ = [
     "ShmemComm",
     "ShmemParcelport",
     "shmem_group_for",
+    "live_segments",
     "DEFAULT_SLOTS",
 ]
 
@@ -97,6 +98,33 @@ _ST_WRITTEN = 1  # committed; announced through the descriptor ring
 _ST_SIG = 2  # committed; the raised signal, discovered by scanning
 
 
+class _LiveCount:
+    """Process-wide census of open shmem slabs — the fleet lifecycle leak
+    regression (ISSUE 7) asserts this stays flat across create/close
+    cycles, so a channel/world that forgets to release its segments fails
+    a test instead of silently accreting mappings."""
+
+    def __init__(self) -> None:
+        self.n = 0
+        self._lock = threading.Lock()
+
+    def inc(self) -> None:
+        with self._lock:
+            self.n += 1
+
+    def dec(self) -> None:
+        with self._lock:
+            self.n -= 1
+
+
+_LIVE = _LiveCount()
+
+
+def live_segments() -> int:
+    """Open (created, not yet released) :class:`ShmemSegment` count."""
+    return _LIVE.n
+
+
 class ShmemSegment:
     """One receiver-owned shared-memory slab, partitioned into slots.
 
@@ -117,7 +145,7 @@ class ShmemSegment:
         nbytes = nslots + nslots * self._stride
         self._shm = None
         self._mmap = None
-        self._finalizer = None
+        _LIVE.inc()
         if backing == "shm":
             from multiprocessing import shared_memory
 
@@ -125,10 +153,18 @@ class ShmemSegment:
             self.buf = self._shm.buf
             # GC backstop: a world that never reaches ShmemGroup.close()
             # must not leak a named /dev/shm segment past interpreter exit.
-            self._finalizer = weakref.finalize(self, _release_shm, self._shm)
+            self._finalizer = weakref.finalize(
+                self, _release_segment, self._shm, None, None
+            )
         else:
             self._mmap = mmap.mmap(-1, nbytes)  # anonymous shared mapping
             self.buf = memoryview(self._mmap)
+            # anonymous mappings leak too (ISSUE 7): fleets create and
+            # close worker slabs by the dozen, so release the view and
+            # unmap eagerly on close() — with the same GC backstop.
+            self._finalizer = weakref.finalize(
+                self, _release_segment, None, self._mmap, self.buf
+            )
         self._lock = threading.Lock()
         self._free: deque = deque(range(nslots))
         # The completion ring for queue-announced arrivals (put+queue-
@@ -213,24 +249,37 @@ class ShmemSegment:
 
     # -------------------------------------------------------------- teardown
     def close(self) -> None:
-        """Release the slab (idempotent).  Named segments unlink here;
-        anonymous mappings are just dropped for GC."""
+        """Release the slab (idempotent): named segments close + unlink,
+        anonymous mappings release their exported view and unmap.  Either
+        way the segment leaves the :func:`live_segments` census."""
         if self._closed:
             return
         self._closed = True
-        if self._finalizer is not None:
-            self._finalizer()
+        self._finalizer()  # weakref.finalize is call-once: safe + idempotent
 
 
-def _release_shm(shm: Any) -> None:
-    try:
-        shm.close()
-    except BufferError:  # pragma: no cover - exported views still alive
-        return
-    try:
-        shm.unlink()
-    except FileNotFoundError:  # pragma: no cover - already unlinked
-        pass
+def _release_segment(shm: Any, mm: Any, view: Any) -> None:
+    """Static teardown (no ref to the segment — runs from GC finalizers)."""
+    _LIVE.dec()
+    if view is not None:
+        try:
+            view.release()
+        except BufferError:  # pragma: no cover - exported sub-views alive
+            pass
+    if mm is not None:
+        try:
+            mm.close()
+        except (BufferError, ValueError):  # pragma: no cover
+            pass
+    if shm is not None:
+        try:
+            shm.close()
+        except BufferError:  # pragma: no cover - exported views still alive
+            return
+        try:
+            shm.unlink()
+        except FileNotFoundError:  # pragma: no cover - already unlinked
+            pass
 
 
 class ShmemGroup:

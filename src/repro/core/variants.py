@@ -32,9 +32,12 @@ from .parcelport import Locality, Parcelport
 
 __all__ = [
     "REGISTRY",
-    "VARIANTS",
+    "SERVE_REGISTRY",
+    "SERVE_VARIANTS",
     "make_parcelport_factory",
+    "make_fleet_config",
     "variant_names",
+    "fleet_variant_names",
     "variant_limits",
     "max_devices",
 ]
@@ -232,6 +235,55 @@ REGISTRY.register_family(VariantSpec(
 
 #: dict-compatible view (legacy name); resolves family members on demand.
 VARIANTS = RegistryView(REGISTRY)
+
+# -- serving-fleet variants (ISSUE 7) ----------------------------------------
+# A SEPARATE registry: fleet variants resolve to FleetConfig objects (the
+# router+worker serving tier), not parcelport configs — they must never
+# leak into `variant_names()`, which the benchmark smoke gate iterates
+# through `make_parcelport_factory`/`deliver_payloads`.
+SERVE_REGISTRY = VariantRegistry()
+
+
+def _fleet_cfg(name: str, workers: int, transport: str):
+    # lazy: repro.serve pulls in jax/models; variants must stay importable
+    # from the stdlib-only gates (tools/check_docs.py)
+    from ..serve import FleetConfig
+
+    del name  # the registry keys the cache; FleetConfig carries no name
+    return FleetConfig(workers=workers, transport=transport)
+
+
+for _n, _tr in (("fleet_inline", "inline"), ("fleet", "collective"), ("fleet_shmem", "shmem")):
+    SERVE_REGISTRY.register(_n, lambda name=_n, tr=_tr: _fleet_cfg(name, 2, tr))
+SERVE_REGISTRY.register_family(VariantSpec(
+    grammar="fleet_w{n}",
+    build=lambda name, n: _fleet_cfg(name, n, "collective"),
+    canonical=((2,), (4,)),
+    doc="router + {n} sharded-KV workers over the collective backend",
+))
+SERVE_REGISTRY.register_family(VariantSpec(
+    grammar="fleet_shmem_w{n}",
+    build=lambda name, n: _fleet_cfg(name, n, "shmem"),
+    canonical=((2,), (4,)),
+    doc="router + {n} workers, responses ride one-sided put (shmem backend)",
+))
+
+#: dict-compatible view of the fleet family (resolves members on demand).
+SERVE_VARIANTS = RegistryView(SERVE_REGISTRY)
+
+
+def fleet_variant_names():
+    return SERVE_REGISTRY.names()
+
+
+def make_fleet_config(name: str):
+    """Resolve a fleet variant name (fixed or family member, e.g.
+    ``fleet_w4``) to a FRESH :class:`~repro.serve.fleet.FleetConfig` —
+    registry resolution is cached, and fleet configs are mutated by
+    callers (slots/context sizing), so each caller gets its own copy."""
+    from dataclasses import replace
+
+    return replace(SERVE_VARIANTS[name])
 
 _NO_LIMITS = ResourceLimits()
 

@@ -6,7 +6,14 @@ latency/throughput stats — the serving-side end-to-end driver.  The
 request/response hand-off rides the shared comm layer (``--transport
 collective``, the default): requests and token batches cross
 ``CommInterface`` verbs, driven by the same ``ProgressEngine`` as the
-parcelport study; ``--transport inline`` runs the legacy direct path.
+parcelport study; ``--transport inline`` runs the legacy direct path;
+``--transport shmem`` rides the one-sided put backend.
+
+``--workers N`` (N > 1) scales the model tier out into the ISSUE 7
+fleet: one router, N sharded-KV workers, per-worker channels over one
+shared group — same math, same request stream, distributed serving.
+``--prefill-chunk C`` turns on chunked prefill (prompts cross the wire
+as C-token pieces interleaved with decode).
 """
 from __future__ import annotations
 
@@ -19,7 +26,7 @@ import numpy as np
 
 from ..configs import get_smoke_config
 from ..models import init_params
-from ..serve import InferenceServer, ServeConfig
+from ..serve import Fleet, FleetConfig, InferenceServer, ServeConfig
 
 
 def main() -> int:
@@ -30,14 +37,37 @@ def main() -> int:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--transport", choices=("collective", "inline"), default="collective")
+    ap.add_argument(
+        "--transport", choices=("collective", "shmem", "inline"), default="collective"
+    )
+    ap.add_argument(
+        "--workers", type=int, default=1,
+        help="model workers; >1 runs the router+fleet tier (slots shard across workers)",
+    )
+    ap.add_argument(
+        "--prefill-chunk", type=int, default=0,
+        help="chunked prefill: prompt piece size in tokens (0 = single-shot prefill)",
+    )
     args = ap.parse_args()
 
     arch = get_smoke_config(args.arch)
     params = init_params(jax.random.PRNGKey(0), arch)
-    server = InferenceServer(
-        arch, params, ServeConfig(slots=args.slots, context=256, transport=args.transport)
-    )
+    if args.workers > 1:
+        server = Fleet(
+            arch, params,
+            FleetConfig(
+                workers=args.workers, slots=args.slots, context=256,
+                transport=args.transport, prefill_chunk=args.prefill_chunk,
+            ),
+        )
+    else:
+        server = InferenceServer(
+            arch, params,
+            ServeConfig(
+                slots=args.slots, context=256, transport=args.transport,
+                prefill_chunk=args.prefill_chunk,
+            ),
+        )
     rng = np.random.default_rng(0)
     reqs = []
     lock = threading.Lock()
@@ -66,10 +96,16 @@ def main() -> int:
     dt = time.monotonic() - t0
     done = [r for r in reqs if r.done_event.is_set()]
     ttft = [r.first_token_at - r.submitted_at for r in done if r.first_token_at]
+    tier = f"fleet(workers={args.workers})" if args.workers > 1 else "single-host"
+    extra = ""
+    if args.workers > 1:
+        extra = f" eagain={server.eagain_events}"
+        server.close()
     print(
         f"requests={len(done)}/{len(reqs)} engine_steps={server.steps} "
         f"tokens={server.tokens_out} throughput={server.tokens_out/dt:.1f} tok/s "
-        f"ttft_p50={np.median(ttft)*1e3:.1f}ms transport={args.transport}"
+        f"ttft_p50={np.median(ttft)*1e3:.1f}ms transport={args.transport} "
+        f"tier={tier}{extra}"
     )
     return 0 if len(done) == len(reqs) else 1
 

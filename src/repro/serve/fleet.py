@@ -1,0 +1,450 @@
+"""Multi-host serving fleet over the comm layer (ISSUE 7, ROADMAP item 1).
+
+One :class:`Router` owns request admission and response collection; N
+:class:`ModelWorker`\\ s each hold a **shard of the KV slot space**
+(``slots // workers`` slots, ``init_cache`` per worker) and run the SAME
+:class:`~repro.serve.server.DecodeCore` as the single-host server.  The
+tiers are connected by per-worker :class:`~repro.core.comm.collective.
+CommChannel`\\ s over ONE shared transport group, driven by the one
+:class:`~repro.core.comm.progress.ProgressEngine` — scaling out the
+serving tier is a backend choice, not a rewrite (the paper's HPX+LCI
+move applied to inference serving).
+
+Topology: router = rank 0, worker *w* = rank ``1 + w``.  Every channel
+shares the router's landing queue for responses, so on put-capable
+backends token batches ride ``post_put_signal`` straight into
+**router-owned slots** (rank 0's slab) — selected purely by the
+advertised :class:`~repro.core.comm.interface.Capabilities`, exactly the
+PR 6 channel path.  Requests stay two-sided (tagged sends to each
+worker's rank).
+
+Scheduling:
+
+* **free-slot-load routing** — a new request goes to the worker with the
+  most estimated headroom (slot shard + admission queue − outstanding),
+  ties to the lowest worker id (deterministic);
+* **cache-affinity stickiness** — follow-up prompt chunks always go to
+  the worker that admitted the first chunk (its cache holds the prefix);
+* **chunked prefill** — prompts longer than ``prefill_chunk`` cross the
+  wire split into chunk messages, one per router step, and the worker
+  consumes them interleaved with decode (see ``DecodeCore``): prefill
+  never stalls decode;
+* **typed admission backpressure** — a worker whose admission queue is
+  full refuses the request with an ``('eagain', ...)`` response; the
+  router RE-QUEUES it (never drops), decrementing that worker's load
+  estimate so the retry prefers less-loaded workers.
+
+The headline property (tests/test_fleet.py): for any request trace, the
+1-router × N-worker fleet over every backend emits exactly the
+per-request token sequences of the single-host reference — the comm
+layer and the sharding move the bytes, not the math.
+"""
+from __future__ import annotations
+
+import itertools
+import pickle
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from ..configs.base import ArchConfig
+from ..core.comm.collective import CollectiveGroup, CommChannel
+from ..core.comm.progress import (
+    CompletionRouter,
+    CompletionSource,
+    ProgressEngine,
+    ProgressPolicy,
+    run_step,
+)
+from ..core.comm.resources import ResourceLimits
+from .server import DecodeCore, Request
+
+__all__ = ["FleetConfig", "ModelWorker", "Router", "Fleet"]
+
+
+@dataclass
+class FleetConfig:
+    workers: int = 2
+    slots: int = 4  # TOTAL slot space, sharded slots // workers per worker
+    context: int = 256
+    max_prefill: int = 64
+    # 0 = single-shot prefill at admission; N>0 = prompts cross the wire
+    # as N-token chunk messages, consumed interleaved with decode
+    prefill_chunk: int = 0
+    # per-worker admission-queue bound: a "new" request beyond this is
+    # refused with a typed EAGAIN response (router re-queues, never drops)
+    admission_depth: int = 2
+    transport: str = "collective"  # 'inline' | 'collective' | 'shmem'
+    # the ProgressPolicy.for_config axes, same as ServeConfig/LCIPPConfig
+    progress_mode: str = "explicit"
+    lock_mode: str = "none"
+    progress_workers: int = 0
+    limits: ResourceLimits = field(default_factory=ResourceLimits)
+
+
+class ModelWorker:
+    """One model shard: a :class:`DecodeCore` over ``slots`` of the fleet's
+    slot space plus a bounded admission queue.  Transport-blind — the
+    router hands it decoded request messages and collects its emissions."""
+
+    def __init__(
+        self,
+        wid: int,
+        arch: ArchConfig,
+        params: Any,
+        slots: int,
+        context: int,
+        max_prefill: int,
+        prefill_chunk: int,
+        admission_depth: int,
+    ):
+        self.wid = wid
+        self.core = DecodeCore(arch, params, slots, context, max_prefill, prefill_chunk)
+        self.admission_depth = admission_depth
+        self._pending: deque = deque()  # accepted, awaiting a free slot
+        self._reqs: Dict[int, Request] = {}  # rid -> worker-side request
+        self._open: Dict[int, bool] = {}  # rid -> more chunks expected
+        self.outbox: List[tuple] = []  # (rid, tok, done) of this step
+        self.eagain_refusals = 0
+        self.rids_seen: List[int] = []  # admission order (stickiness proof)
+
+    # --------------------------------------------------------- request plane
+    def handle_request(self, msg: tuple) -> Optional[tuple]:
+        """Apply one router→worker message.  Returns a refusal message to
+        send back, or None."""
+        kind = msg[0]
+        if kind == "new":
+            _, rid, tokens, last, max_new = msg
+            if len(self._pending) >= self.admission_depth:
+                # typed admission backpressure: the worker's EAGAIN — the
+                # router re-queues the request, it is NEVER dropped here
+                self.eagain_refusals += 1
+                return ("eagain", self.wid, rid)
+            req = Request(rid=rid, prompt=list(tokens), max_new=max_new)
+            self._reqs[rid] = req
+            self._open[rid] = not last
+            self._pending.append(req)
+            self.rids_seen.append(rid)
+            return None
+        assert kind == "chunk", kind
+        _, rid, tokens, last = msg
+        req = self._reqs.get(rid)
+        if req is None:
+            # orphan chunk of a refused request: the channel is FIFO per
+            # direction, so these all precede any re-dispatched "new"
+            return None
+        if self.core.prefilling(rid):
+            self.core.feed_chunk(rid, list(tokens), last)
+        else:  # still queued: extend the prompt before admission
+            req.prompt.extend(tokens)
+            if last:
+                self._open[rid] = False
+        if last:
+            self._open[rid] = False
+        return None
+
+    # ------------------------------------------------------------ decode plane
+    def _admit(self) -> None:
+        while self._pending and self.core.free_slots():
+            req = self._pending[0]
+            if self.core.prefill_chunk <= 0 and self._open.get(req.rid):
+                return  # single-shot prefill needs the whole prompt first
+            self._pending.popleft()
+            self.core.admit(req, self._emit, more_chunks=self._open[req.rid])
+
+    def _emit(self, req: Request, tok: int, done: bool) -> None:
+        self.outbox.append((req.rid, tok, done))
+        if done:
+            self._reqs.pop(req.rid, None)
+            self._open.pop(req.rid, None)
+
+    def step(self) -> bool:
+        self._admit()
+        return self.core.step(self._emit)
+
+    def busy(self) -> bool:
+        return bool(self._pending) or self.core.active()
+
+
+class Router:
+    """The admission/collection tier.  ``Router`` owns the client-facing
+    request objects, the routing + chunking state machine, and (for comm
+    transports) the shared group, the per-worker channels and the ONE
+    progress engine.  It is also the engine's op adapter (``execute``),
+    exactly like :class:`~repro.serve.server.InferenceServer`."""
+
+    def __init__(self, arch: ArchConfig, params: Any, cfg: Optional[FleetConfig] = None):
+        self.cfg = cfg = FleetConfig() if cfg is None else cfg
+        assert cfg.workers >= 1 and cfg.slots >= cfg.workers, (cfg.workers, cfg.slots)
+        per_worker = cfg.slots // cfg.workers
+        self.workers = [
+            ModelWorker(
+                w, arch, params, per_worker, cfg.context, cfg.max_prefill,
+                cfg.prefill_chunk, cfg.admission_depth,
+            )
+            for w in range(cfg.workers)
+        ]
+        self._rid = itertools.count()
+        self._queue: deque = deque()  # un-routed (or re-queued) requests
+        self._inflight: Dict[int, Request] = {}  # rid -> client-side request
+        self._inflight_lock = threading.Lock()
+        self._sticky: Dict[int, int] = {}  # rid -> admitting worker
+        self._chunks: Dict[int, deque] = {}  # rid -> unsent chunk messages
+        self._outstanding = [0] * cfg.workers  # dispatched - (done|eagain)
+        self.eagain_events = 0  # worker refusals observed by the router
+        self.requeues = 0
+        self.completed = 0
+        self.steps = 0
+        # ---- transport ----------------------------------------------------
+        self.group: Any = None
+        self.channels: List[CommChannel] = []
+        self.engine: Optional[ProgressEngine] = None
+        if cfg.transport in ("collective", "shmem"):
+            if cfg.transport == "shmem":
+                from ..core.comm.shmem import ShmemGroup
+
+                self.group = ShmemGroup(
+                    1 + cfg.workers, 1, limits=cfg.limits, completion_mode="queue"
+                )
+            else:
+                self.group = CollectiveGroup(1 + cfg.workers, 1, limits=cfg.limits)
+            # channel w: router (rank 0, the shared client endpoint) <->
+            # worker w (rank 1+w); ALL channels land responses in channel
+            # 0's queue — the router-owned landing slots
+            for w in range(cfg.workers):
+                self.channels.append(
+                    CommChannel(
+                        limits=cfg.limits,
+                        backend=cfg.transport,
+                        group=self.group,
+                        client_rank=0,
+                        server_rank=1 + w,
+                        response_cq=self.channels[0].response_cq if w else None,
+                    )
+                )
+            self.engine = ProgressEngine(
+                ProgressPolicy.for_config(cfg).variant(step_lock=True),
+                CompletionRouter(
+                    [CompletionSource(f"request:{w}") for w in range(cfg.workers)]
+                    + [CompletionSource("response")],
+                    ndevices=1,
+                ),
+                ndevices=1,
+            )
+            self._step_lock = threading.Lock()
+        else:
+            assert cfg.transport == "inline", cfg.transport
+
+    # ------------------------------------------------------------------ client
+    def submit(self, prompt: List[int], max_new: int = 16) -> Request:
+        req = Request(rid=next(self._rid), prompt=list(prompt), max_new=max_new)
+        req.submitted_at = time.monotonic()
+        with self._inflight_lock:
+            self._inflight[req.rid] = req
+        self._queue.append(req)
+        return req
+
+    # ------------------------------------------------- routing + chunk plan
+    def _plan(self, req: Request) -> tuple:
+        """Split a request into its wire messages: the ``new`` message and
+        any follow-up ``chunk`` messages (chunked prefill)."""
+        prompt = req.prompt[: self.cfg.max_prefill]
+        chunk = self.cfg.prefill_chunk
+        if chunk <= 0 or len(prompt) <= chunk:
+            return ("new", req.rid, prompt, True, req.max_new), deque()
+        pieces = [prompt[i : i + chunk] for i in range(chunk, len(prompt), chunk)]
+        rest = deque(
+            ("chunk", req.rid, piece, i == len(pieces) - 1)
+            for i, piece in enumerate(pieces)
+        )
+        return ("new", req.rid, prompt[:chunk], False, req.max_new), rest
+
+    def _pick_worker(self) -> int:
+        """Free-slot-load routing: most headroom wins, ties to the lowest
+        worker id.  Dispatch is optimistic — the authoritative bound is
+        the worker's own admission queue (its EAGAIN, our re-queue)."""
+        per = self.cfg.slots // self.cfg.workers
+
+        def headroom(w: int) -> int:
+            return per + self.cfg.admission_depth - self._outstanding[w]
+
+        return max(range(self.cfg.workers), key=lambda w: (headroom(w), -w))
+
+    def _send(self, wid: int, msg: tuple) -> None:
+        if self.channels:
+            self.channels[wid].send_request(pickle.dumps(msg))
+        else:  # inline: same messages, no serialization hop
+            refusal = self.workers[wid].handle_request(msg)
+            if refusal is not None:
+                self._handle_response(pickle.dumps([refusal]))
+
+    def _route(self) -> None:
+        # new (and re-queued) requests: route by load, send first chunk.
+        # Snapshot the count: an inline-mode refusal re-queues
+        # synchronously, and a refused request must wait for the NEXT
+        # router step (after workers have stepped), not spin here.
+        for _ in range(len(self._queue)):
+            req = self._queue.popleft()
+            wid = self._pick_worker()
+            new_msg, rest = self._plan(req)
+            self._sticky[req.rid] = wid
+            self._chunks[req.rid] = rest
+            self._outstanding[wid] += 1
+            self._send(wid, new_msg)
+        # follow-up chunks: ONE per request per router step, to the sticky
+        # worker — prefill traffic interleaves with decode, never bursts
+        for rid in list(self._chunks):
+            rest = self._chunks.get(rid)
+            if rest is None or rid not in self._sticky:
+                continue  # refused meanwhile: re-planned on re-dispatch
+            if not rest:
+                del self._chunks[rid]
+                continue
+            self._send(self._sticky[rid], rest.popleft())
+
+    # -------------------------------------------------------- response plane
+    def _handle_response(self, payload: bytes) -> None:
+        now = time.monotonic()
+        for item in pickle.loads(payload):
+            if item[0] == "eagain":
+                _, wid, rid = item
+                self.eagain_events += 1
+                self.requeues += 1
+                self._outstanding[wid] -= 1
+                self._sticky.pop(rid, None)
+                self._chunks.pop(rid, None)  # re-plan (and re-send) everything
+                with self._inflight_lock:
+                    req = self._inflight.get(rid)
+                if req is not None:
+                    self._queue.append(req)  # re-queued, NEVER dropped
+                continue
+            rid, tok, done = item
+            with self._inflight_lock:
+                req = self._inflight.get(rid)
+            if req is None:
+                continue
+            if req.first_token_at is None:
+                req.first_token_at = now
+            req.out_tokens.append(tok)
+            if done:
+                req.finished_at = now
+                req.done_event.set()
+                self.completed += 1
+                wid = self._sticky.pop(rid, None)
+                if wid is not None:
+                    self._outstanding[wid] -= 1
+                with self._inflight_lock:
+                    self._inflight.pop(rid, None)
+
+    def _flush_workers(self) -> None:
+        for w, worker in enumerate(self.workers):
+            if not worker.outbox:
+                continue
+            batch, worker.outbox = worker.outbox, []
+            if self.channels:
+                self.channels[w].send_response(pickle.dumps(batch))
+            else:
+                self._handle_response(pickle.dumps(batch))
+
+    # -------------------------------------------- the engine's op adapter
+    def execute(self, op: tuple) -> Any:
+        """The fleet's half of the engine contract: one op against the
+        per-worker channels (N request sources + the shared response
+        source — the engine never interprets the names, this adapter
+        does)."""
+        kind = op[0]
+        if kind == "reap":
+            name = op[1].name
+            if name == "response":
+                return self.channels[0].response_cq.reap()
+            return self.channels[int(name.split(":", 1)[1])].request_cq.reap()
+        if kind == "dispatch":
+            src, rec = op[1].name, op[3]
+            if rec.op == "send":
+                return True
+            if src == "response":
+                if rec.ctx == "response":  # two-sided recv consumed a pre-post
+                    self.channels[0].repost("response")
+                self._handle_response(rec.data)
+                return True
+            wid = int(src.split(":", 1)[1])
+            self.channels[wid].repost("request")
+            refusal = self.workers[wid].handle_request(pickle.loads(rec.data))
+            if refusal is not None:
+                self.channels[wid].send_response(pickle.dumps([refusal]))
+            return True
+        if kind == "progress":
+            moved = False
+            for ch in self.channels:
+                moved = ch.progress() or moved
+            return moved
+        if kind == "poll":
+            moved = False
+            for ch in self.channels:
+                moved = ch.poll() or moved
+            return moved
+        if kind == "drain_retries":
+            moved = False
+            for ch in self.channels:
+                moved = ch.drain_retries() or moved
+            return moved
+        if kind == "step_trylock":
+            return self._step_lock.acquire(blocking=False)
+        if kind == "step_unlock":
+            self._step_lock.release()
+            return True
+        if kind == "dev_trylock":
+            return True
+        return False
+
+    def _comm_step(self) -> bool:
+        if self.engine is None:
+            return False
+        return run_step(self.engine, self, 0)
+
+    # ------------------------------------------------------------------ engine
+    def step(self) -> bool:
+        """One fleet iteration: pump the channels, route, step every
+        worker's decode shard, flush token batches back."""
+        self._comm_step()
+        self._route()
+        worked = False
+        for worker in self.workers:
+            worked = worker.step() or worked
+        self._flush_workers()
+        self._comm_step()
+        self.steps += 1
+        return worked
+
+    @property
+    def tokens_out(self) -> int:
+        return sum(w.core.tokens_out for w in self.workers)
+
+    def idle(self) -> bool:
+        if self._queue or self._chunks or any(w.busy() for w in self.workers):
+            return False
+        if self._inflight:
+            return False
+        return not any(ch.pending_work() for ch in self.channels)
+
+    def run_until_idle(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.step() and self.idle():
+                return
+
+    # --------------------------------------------------------------- teardown
+    def close(self) -> None:
+        """Release transport resources (idempotent) — the fleet lifecycle
+        leak regression cycles this 50×."""
+        if self.group is not None and hasattr(self.group, "close"):
+            self.group.close()
+        self.channels = []
+        self.engine = None
+        self.group = None
+
+
+# The tentpole's public name: a fleet IS its router plus the workers it
+# owns — constructing one wires the whole tier up.
+Fleet = Router

@@ -21,6 +21,12 @@ SAME :class:`~repro.core.comm.progress.ProgressEngine` as the parcelports
 ``SimConfig``).  ``transport='inline'`` keeps the legacy direct hand-off
 as the round-trip parity reference — both paths produce identical
 responses for the same request stream (tests/test_executor_serve.py).
+
+Since ISSUE 7 the slot scheduler + batched decode live in
+:class:`DecodeCore`, shared verbatim between this single-host server and
+the fleet's :class:`~repro.serve.fleet.ModelWorker` — the fleet shards
+the slot space across workers but runs the SAME math, which is what makes
+the token-stream equivalence tests exact rather than approximate.
 """
 from __future__ import annotations
 
@@ -30,7 +36,7 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +48,7 @@ from ..core.comm.progress import ProgressEngine, ProgressPolicy, run_step
 from ..core.comm.resources import ResourceLimits
 from ..models import decode_step, init_cache, prefill
 
-__all__ = ["ServeConfig", "Request", "InferenceServer"]
+__all__ = ["ServeConfig", "Request", "DecodeCore", "InferenceServer"]
 
 
 @dataclass
@@ -58,6 +64,11 @@ class ServeConfig:
     # Capabilities advertise one_sided_put — ISSUE 6); 'inline' is the
     # legacy direct hand-off (the parity reference in tests).
     transport: str = "collective"
+    # Chunked prefill (ISSUE 7): 0 = classic single-shot prefill at
+    # admission; N > 0 = prompts are consumed incrementally, interleaved
+    # with decode of the other slots, and cross the fleet transport split
+    # into N-token chunk messages — prefill never stalls decode.
+    prefill_chunk: int = 0
     # ProgressPolicy.for_config axes — the same fields, by design, as
     # LCIPPConfig and the DES SimConfig: the serving hot path sweeps the
     # §5.3 policy ladder like any parcelport variant.
@@ -80,6 +91,213 @@ class Request:
     finished_at: Optional[float] = None
 
 
+# emit(req, token, done) — one generated token leaves the model side.
+EmitFn = Callable[[Request, int, bool], None]
+
+
+class DecodeCore:
+    """Slot scheduler + batched decode, independent of any transport.
+
+    Owns the batched ring KV cache (``init_cache(arch, slots, context)``),
+    per-slot positions / budgets, and the two jitted entry points.  The
+    single-host :class:`InferenceServer` runs ONE core with ``cfg.slots``
+    slots; the fleet runs N cores of ``slots // n_workers`` each.  Rows of
+    the batched decode are computed independently (verified bit-exact in
+    tests/test_fleet.py), so sharding the slot space across cores cannot
+    change any request's token stream.
+
+    Two admission modes:
+
+    * **single-shot** (``prefill_chunk == 0``): the whole prompt runs
+      through the jitted ``prefill`` on a scratch cache and is spliced
+      into the slot — one dispatch, first token emitted at admission.
+    * **chunked** (``prefill_chunk > 0``): the slot starts empty and
+      consumes ONE prompt token per engine step through the same batched
+      ``decode_step`` that serves the decoding slots (teacher forcing).
+      Per-step work is one uniform batched decode regardless of prompt
+      length — a long prompt can never stall other slots' decode.  Chunk
+      arrivals may lag the consumer; a starved slot simply re-feeds its
+      last token WITHOUT advancing its position, and the garbage KV row
+      is overwritten when the real token arrives (the cache write is
+      position-addressed), so stall timing cannot perturb the stream.
+    """
+
+    def __init__(
+        self,
+        arch: ArchConfig,
+        params: Any,
+        slots: int,
+        context: int,
+        max_prefill: int = 64,
+        prefill_chunk: int = 0,
+    ):
+        self.arch, self.params = arch, params
+        self.slots, self.context = slots, context
+        self.max_prefill, self.prefill_chunk = max_prefill, prefill_chunk
+        self._slots: List[Optional[Request]] = [None] * slots
+        self._positions = np.zeros((slots,), np.int32)
+        self._remaining = np.zeros((slots,), np.int32)
+        self._last_tok = np.zeros((slots,), np.int32)
+        # one shared batched cache; per-slot prefill via single-slot caches
+        self.cache = init_cache(arch, slots, context)
+        # zeroed single-slot row: splicing it in resets a recycled slot
+        # (stale position tags must not leak into a new sequence)
+        self._fresh_row = init_cache(arch, 1, context)
+        self._prefill_one = jax.jit(
+            lambda p, b, c: prefill(p, arch, b, c), donate_argnums=(2,)
+        )
+        self._decode = jax.jit(
+            lambda p, t, pos, c: decode_step(p, arch, t, pos, c), donate_argnums=(3,)
+        )
+
+        # ONE jitted, donated cache splice (ISSUE 7 satellite): the old
+        # per-admission `jax.tree.map(splice, ...)` ran a separate
+        # dynamic_update_slice dispatch per cache leaf OUTSIDE jit,
+        # copying the full cache each time — admission cost grew with the
+        # total slot count.  Donating the full cache lets XLA update the
+        # one row in place: admission cost is now flat in `slots`
+        # (pinned by test_admission_cost_flat_in_slot_count).
+        def _splice(full, piece, slot):
+            def leaf(f, pc):
+                if f.ndim >= 2 and pc.shape[0] == f.shape[0]:
+                    # stacked leading layer dim, batch at axis 1
+                    return jax.lax.dynamic_update_slice_in_dim(f, pc, slot, axis=1)
+                return f
+
+            return jax.tree.map(leaf, full, piece)
+
+        self._splice = jax.jit(_splice, donate_argnums=(0,))
+        self.steps = 0
+        self.tokens_out = 0
+        self.prefill_calls = 0  # single-shot prefill dispatches (0 when chunked)
+        # worst prompt-tokens-of-prefill-work attributed to a single engine
+        # step — the burst chunked prefill exists to bound (≤ active slots
+        # per step vs a whole prompt per admission single-shot)
+        self.max_prefill_burst = 0
+        self._pending_burst = 0  # single-shot prefill work since last step
+        # chunked-prefill state: slot -> queued prompt tokens / open flag
+        self._prefill_queue: Dict[int, deque] = {}
+        self._prefill_open: Dict[int, bool] = {}
+        self._rid_slot: Dict[int, int] = {}
+
+    # ------------------------------------------------------------- occupancy
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self._slots) if r is None]
+
+    def active(self) -> bool:
+        return any(r is not None for r in self._slots)
+
+    # ------------------------------------------------------------- admission
+    def admit(self, req: Request, emit: EmitFn, more_chunks: bool = False) -> int:
+        """Place ``req`` into the lowest free slot.  With chunked prefill,
+        ``req.prompt`` may hold only the FIRST chunk; ``more_chunks=True``
+        keeps the slot in the prefilling state until :meth:`feed_chunk`
+        delivers the rest.  Returns the slot index."""
+        slot = self.free_slots()[0]
+        if self.prefill_chunk > 0:
+            prompt = req.prompt if more_chunks else req.prompt[: self.max_prefill]
+            # reset the recycled row (zero KV, position tags = -1), then
+            # consume the prompt one token per step through decode_step
+            self.cache = self._splice(self.cache, self._fresh_row, slot)
+            self._slots[slot] = req
+            self._positions[slot] = 0
+            self._remaining[slot] = req.max_new
+            self._prefill_queue[slot] = deque(prompt)
+            self._prefill_open[slot] = more_chunks
+            self._rid_slot[req.rid] = slot
+            return slot
+        prompt = req.prompt[: self.max_prefill]
+        toks = np.zeros((1, self.max_prefill), np.int32)
+        toks[0, -len(prompt) :] = prompt  # left-pad; ring positions still 0..n
+        # single-sequence prefill on a scratch cache, then splice into slot
+        one = init_cache(self.arch, 1, self.context)
+        batch = {"tokens": jnp.asarray(toks[:, -len(prompt) :])}
+        logits, one = self._prefill_one(self.params, batch, one)
+        self.prefill_calls += 1
+        self._pending_burst += len(prompt)
+        self.cache = self._splice(self.cache, one, slot)
+        tok = int(jnp.argmax(logits[0, -1]))
+        done = req.max_new <= 1
+        self._slots[slot] = None if done else req
+        self._positions[slot] = len(prompt)
+        self._remaining[slot] = req.max_new - 1
+        self._last_tok[slot] = tok
+        self._rid_slot[req.rid] = slot
+        if done:
+            self._rid_slot.pop(req.rid, None)
+        self.tokens_out += 1
+        emit(req, tok, done)
+        return slot
+
+    def feed_chunk(self, rid: int, tokens: List[int], last: bool) -> None:
+        """Append a follow-up prompt chunk for an admitted request."""
+        slot = self._rid_slot[rid]
+        assert self._prefill_open.get(slot), f"slot {slot} is not expecting chunks"
+        self._prefill_queue[slot].extend(tokens)
+        if last:
+            self._prefill_open[slot] = False
+
+    def prefilling(self, rid: int) -> bool:
+        slot = self._rid_slot.get(rid)
+        return slot is not None and slot in self._prefill_queue
+
+    # ----------------------------------------------------------------- step
+    def step(self, emit: EmitFn) -> bool:
+        """One batched decode over all active slots.  Decoding slots
+        advance one generated token; prefilling slots consume one prompt
+        token (emitting their first token when the prompt is exhausted);
+        starved prefilling slots hold position.  Returns False when no
+        slot is active (no decode dispatched)."""
+        active = [i for i, r in enumerate(self._slots) if r is not None]
+        if not active:
+            return False
+        fed: Dict[int, int] = {}  # slot -> prompt token fed this step
+        for i in active:
+            q = self._prefill_queue.get(i)
+            if q is None:
+                continue  # plain decoding slot
+            if q:
+                fed[i] = self._last_tok_feed(i, q.popleft())
+            # else: starved mid-prefill — re-feed last token, hold position
+        toks = jnp.asarray(self._last_tok[:, None])
+        pos = jnp.asarray(self._positions)
+        logits, self.cache = self._decode(self.params, toks, pos, self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        for i in active:
+            req = self._slots[i]
+            if i in self._prefill_queue:
+                if i not in fed:
+                    continue  # starved: nothing advanced
+                self._positions[i] += 1
+                if self._prefill_queue[i] or self._prefill_open[i]:
+                    continue  # more prompt to consume: no emission yet
+                # the LAST prompt token was just fed: its logits give the
+                # first generated token — the chunked analogue of the
+                # single-shot prefill's argmax(logits[0, -1])
+                del self._prefill_queue[i]
+                del self._prefill_open[i]
+            else:
+                self._positions[i] += 1
+            self._remaining[i] -= 1
+            self._last_tok[i] = nxt[i]
+            done = self._remaining[i] <= 0
+            self.tokens_out += 1
+            emit(req, int(nxt[i]), done)
+            if done:
+                self._slots[i] = None
+                self._rid_slot.pop(req.rid, None)
+        self.steps += 1
+        burst = self._pending_burst + len(fed)
+        if burst > self.max_prefill_burst:
+            self.max_prefill_burst = burst
+        self._pending_burst = 0
+        return True
+
+    def _last_tok_feed(self, slot: int, tok: int) -> int:
+        self._last_tok[slot] = tok
+        return tok
+
+
 class InferenceServer:
     def __init__(self, arch: ArchConfig, params: Any, cfg: Optional[ServeConfig] = None):
         # Per-instance config: a shared mutable default (`cfg=ServeConfig()`
@@ -91,20 +309,9 @@ class InferenceServer:
         # Server-side admission queue: requests that have ARRIVED (through
         # the channel, or directly in inline mode) and await a free slot.
         self._pending: deque = deque()
-        self._slots: List[Optional[Request]] = [None] * cfg.slots
-        self._positions = np.zeros((cfg.slots,), np.int32)
-        self._remaining = np.zeros((cfg.slots,), np.int32)
-        self._last_tok = np.zeros((cfg.slots,), np.int32)
-        # one shared batched cache; per-slot prefill via single-slot caches
-        self.cache = init_cache(arch, cfg.slots, cfg.context)
-        self._prefill_one = jax.jit(
-            lambda p, b, c: prefill(p, arch, b, c), donate_argnums=(2,)
+        self.core = DecodeCore(
+            arch, params, cfg.slots, cfg.context, cfg.max_prefill, cfg.prefill_chunk
         )
-        self._decode = jax.jit(
-            lambda p, t, pos, c: decode_step(p, arch, t, pos, c), donate_argnums=(3,)
-        )
-        self.steps = 0
-        self.tokens_out = 0
         # The comm hand-off (collective transport): channel + the SAME
         # progress engine as the parcelports, policy from this config.
         self._channel: Optional[CommChannel] = None
@@ -126,6 +333,19 @@ class InferenceServer:
             self._step_lock = threading.Lock()
         else:
             assert cfg.transport == "inline", cfg.transport
+
+    # backwards-visible counters/state now owned by the core
+    @property
+    def cache(self):
+        return self.core.cache
+
+    @property
+    def steps(self) -> int:
+        return self.core.steps
+
+    @property
+    def tokens_out(self) -> int:
+        return self.core.tokens_out
 
     # ----------------------------------------------------------------- client
     def submit(self, prompt: List[int], max_new: int = 16) -> Request:
@@ -210,7 +430,6 @@ class InferenceServer:
         client's Request (inline), or into this step's outbound batch —
         token completions for all active slots aggregate into ONE response
         message per engine step (§2.2.2 on the serving hot path)."""
-        self.tokens_out += 1
         if self._channel is None:
             now = time.monotonic()
             if req.first_token_at is None:
@@ -230,64 +449,21 @@ class InferenceServer:
         return True
 
     # ----------------------------------------------------------------- engine
-    def _free_slots(self) -> List[int]:
-        return [i for i, r in enumerate(self._slots) if r is None]
-
     def _admit(self) -> None:
-        for slot in self._free_slots():
+        for _ in self.core.free_slots():
             if not self._pending:
                 return
-            self._start(slot, self._pending.popleft())
-
-    def _start(self, slot: int, req: Request) -> None:
-        cfg, arch = self.cfg, self.arch
-        prompt = req.prompt[: cfg.max_prefill]
-        toks = np.zeros((1, cfg.max_prefill), np.int32)
-        toks[0, -len(prompt) :] = prompt  # left-pad; ring positions still 0..n
-        # single-sequence prefill on a scratch cache, then splice into slot
-        one = init_cache(arch, 1, cfg.context)
-        batch = {"tokens": jnp.asarray(toks[:, -len(prompt) :])}
-        logits, one = self._prefill_one(self.params, batch, one)
-
-        def splice(full, piece):
-            if full.ndim >= 2 and piece.shape[0] == full.shape[0]:
-                # stacked leading layer dim, batch at axis 1
-                return jax.lax.dynamic_update_slice_in_dim(full, piece, slot, axis=1)
-            return full
-
-        self.cache = jax.tree.map(splice, self.cache, one)
-        tok = int(jnp.argmax(logits[0, -1]))
-        done = req.max_new <= 1
-        self._slots[slot] = None if done else req
-        self._positions[slot] = len(prompt)
-        self._remaining[slot] = req.max_new - 1
-        self._last_tok[slot] = tok
-        self._emit(req, tok, done)
+            self.core.admit(self._pending.popleft(), self._emit)
 
     def step(self) -> bool:
         """One engine iteration: pump the comm hand-off, admit, batched-
         decode all active slots, flush the token batch back."""
         self._comm_step()
         self._admit()
-        active = [i for i, r in enumerate(self._slots) if r is not None]
-        if not active:
+        if not self.core.step(self._emit):
             if self._flush_outbox():  # e.g. prefill-only finishes
                 self._comm_step()
             return False
-        toks = jnp.asarray(self._last_tok[:, None])
-        pos = jnp.asarray(self._positions)
-        logits, self.cache = self._decode(self.params, toks, pos, self.cache)
-        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
-        for i in active:
-            self._positions[i] += 1
-            self._remaining[i] -= 1
-            self._last_tok[i] = nxt[i]
-            req = self._slots[i]
-            done = self._remaining[i] <= 0
-            self._emit(req, int(nxt[i]), done)
-            if done:
-                self._slots[i] = None
-        self.steps += 1
         self._flush_outbox()
         self._comm_step()
         return True
@@ -300,7 +476,7 @@ class InferenceServer:
     def idle(self) -> bool:
         """Nothing slotted, nothing pending, nothing in flight on the
         hand-off channel."""
-        if any(r is not None for r in self._slots) or self._pending:
+        if self.core.active() or self._pending:
             return False
         if self._channel is not None and (self._inflight or self._channel.pending_work()):
             return False

@@ -281,3 +281,105 @@ def test_one_group_per_world_and_completion_mode_pinned():
 def test_default_slot_count_matches_device_prepost_depth():
     assert ShmemGroup(2).nslots == DEFAULT_SLOTS
     assert isinstance(ShmemGroup(2).endpoint(0), ShmemComm)
+
+# ------------------------------------------- fleet verb usage (ISSUE 7, S2)
+# The serving fleet extends the conformance matrix to multi-endpoint
+# worlds: one router endpoint (rank 0) + N worker endpoints on ONE shared
+# group.  Requests always ride the two-sided pair; responses ride
+# post_put_signal into the router-owned landing queue exactly when the
+# backend's Capabilities advertise one_sided_put — never selected by
+# backend name or type.
+
+
+def _mk_fleet_world(kind, workers=2):
+    if kind == "collective":
+        grp = CollectiveGroup(1 + workers, 1)
+    else:
+        grp = ShmemGroup(1 + workers, 1, completion_mode=kind.split("_")[1])
+    return grp, grp.endpoint(0), [grp.endpoint(1 + w) for w in range(workers)]
+
+
+@pytest.mark.parametrize("kind", ["collective", "shmem_queue", "shmem_signal"])
+def test_fleet_verb_usage_conformance(kind):
+    """Router/worker traffic at the raw verb level over a 1+N world:
+    two-sided requests fan out to every worker; responses converge on the
+    ONE router-owned landing queue — via put iff capable, with honest
+    src_rank attribution either way."""
+    grp, router, ws = _mk_fleet_world(kind)
+    landing = LCRQueue()
+    put_capable = kind != "collective"
+    if put_capable:
+        router.put_target_comp = landing  # router-owned landing slots
+        for ep in ws:  # what makes each worker's capability honest
+            ep.put_target_comp = LCRQueue()
+    assert all(ep.capabilities.one_sided_put is put_capable for ep in ws)
+
+    # router -> each worker: the two-sided request pair, per-worker tag'd CQ
+    req_cqs = []
+    for w, ep in enumerate(ws):
+        cq = LCRQueue()
+        ep.post_recv(-1, 11, cq, ctx=f"request:{w}")
+        req_cqs.append(cq)
+        st = router.post_send(1 + w, 0, 11, b"req%d" % w, LCRQueue(), ctx="tx")
+        assert st is PostStatus.OK
+    _drive(router, *ws)
+    for w, cq in enumerate(req_cqs):
+        rec = cq.reap()
+        assert rec is not None and rec.data == b"req%d" % w
+        assert rec.src_rank == 0 and rec.ctx == f"request:{w}"
+
+    # worker -> router: put iff the Capabilities say so, else two-sided
+    if put_capable:
+        for w, ep in enumerate(ws):
+            st = ep.post_put_signal(0, 0, b"resp%d" % w, LCRQueue(), ctx="tx")
+            assert st is PostStatus.OK
+    else:
+        for w, ep in enumerate(ws):
+            with pytest.raises(UnsupportedCapabilityError):
+                ep.post_put_signal(0, 0, b"resp%d" % w, LCRQueue())
+            router.post_recv(-1, 12, landing, ctx="response")
+            st = ep.post_send(0, 0, 12, b"resp%d" % w, LCRQueue(), ctx="tx")
+            assert st is PostStatus.OK
+    _drive(router, *ws)
+    got = {}
+    while True:
+        rec = landing.reap()
+        if rec is None:
+            break
+        got[rec.src_rank] = rec.data
+    assert got == {1 + w: b"resp%d" % w for w in range(len(ws))}
+
+
+@pytest.mark.parametrize("transport", ["shmem", "collective"])
+def test_fleet_channels_share_router_landing(transport):
+    """The fleet's per-worker channels all land responses in channel 0's
+    response queue (the router-owned slots), each channel's put selection
+    reads ONLY its server endpoint's Capabilities, and rebinding the
+    shared client endpoint to a different landing queue is refused."""
+    import jax
+
+    from repro.configs import SMOKES
+    from repro.core.comm.collective import CommChannel
+    from repro.models import init_params
+    from repro.serve import Fleet, FleetConfig
+
+    arch = SMOKES["tinyllama-1.1b"].variant(dtype="float32")
+    params = init_params(jax.random.PRNGKey(0), arch)
+    fleet = Fleet(
+        arch, params,
+        FleetConfig(workers=3, slots=3, context=64, transport=transport),
+    )
+    try:
+        shared = fleet.channels[0].response_cq
+        for ch in fleet.channels:
+            assert ch.response_cq is shared
+            assert ch._put_responses == ch.server.capabilities.one_sided_put
+            assert ch._put_responses == (transport == "shmem")
+        if transport == "shmem":  # the rebind guard lives on put targets
+            with pytest.raises(AssertionError, match="landing"):
+                CommChannel(
+                    backend=transport, group=fleet.group,
+                    client_rank=0, server_rank=1, response_cq=LCRQueue(),
+                )
+    finally:
+        fleet.close()
