@@ -15,7 +15,12 @@ ring never exceeding its depth, the explicit and implicit progress
 policies of the ONE shared ProgressEngine must deliver the same payload
 set on the functional core (delivery parity), and the tiny
 ``progress_contention`` ladder (policy × worker count, §5.3) must
-REPRODUCE every claim.  Results land in ``experiments/bench/smoke.json``
+REPRODUCE every claim, every serving-fleet variant must emit token
+streams identical to the single-host reference, and the elastic-capacity
+path (ISSUE 8) must survive a mid-decode worker leave with a
+checkpointed KV handoff — bit-identical tokens, zero drops — while the
+reap-latency telemetry (functional engine + DES controller) lands in the
+smoke JSON.  Results land in ``experiments/bench/smoke.json``
 (the CI artifact) and the exit code is non-zero on any failure.
 """
 from __future__ import annotations
@@ -306,6 +311,75 @@ def smoke() -> int:
     except Exception as exc:  # noqa: BLE001
         traceback.print_exc()
         failures.append(f"fleet: {exc}")
+
+    # 10. elastic capacity (ISSUE 8): a worker leaves the fleet MID-DECODE
+    # with a checkpointed KV handoff — token streams must stay identical to
+    # the fixed single-host reference with zero drops; the reap-latency
+    # telemetry (engine + DES) lands in the smoke JSON for trend tracking
+    try:
+        import dataclasses
+
+        import jax
+
+        from repro.amtsim.parcelport_sim import sim_config_for_variant
+        from repro.amtsim.workloads import octotiger
+        from repro.configs import SMOKES
+        from repro.models import init_params
+        from repro.serve import Fleet, FleetConfig, InferenceServer, ServeConfig
+
+        arch = SMOKES["tinyllama-1.1b"].variant(dtype="float32")
+        params = init_params(jax.random.PRNGKey(0), arch)
+        trace = [([1, 2, 3], 4), ([4, 5, 6, 7], 5), ([8, 9], 4), ([3, 1], 5)]
+        single = InferenceServer(arch, params,
+                                 ServeConfig(slots=4, context=64, transport="inline"))
+        ref_reqs = [single.submit(p, max_new=m) for p, m in trace]
+        single.run_until_idle()
+        ref = [r.out_tokens for r in ref_reqs]
+        fleet = Fleet(arch, params,
+                      FleetConfig(workers=2, slots=4, context=64,
+                                  transport="collective", max_workers=3))
+        try:
+            reqs = [fleet.submit(p, max_new=m) for p, m in trace]
+            for _ in range(3):
+                fleet.step()  # decode underway before the leave
+            fleet.add_worker()
+            fleet.leave_worker(0)
+            fleet.run_until_idle()
+            out = [r.out_tokens for r in reqs]
+            engine_reap = fleet.engine.reap_latency_stats() if fleet.engine else {}
+            results["elastic_fleet"] = {
+                "handoffs": fleet.handoffs, "joins": fleet.joins,
+                "leaves": fleet.leaves, "completed": fleet.completed,
+                "stale_discards": fleet.membership.stale_discards,
+                "engine_reap": engine_reap,
+            }
+            if not all(r.done_event.is_set() for r in reqs):
+                raise RuntimeError("elastic fleet dropped requests across the leave")
+            if out != ref:
+                raise RuntimeError("elastic fleet diverged from the fixed reference")
+            if fleet.handoffs < 1:
+                raise RuntimeError("leave_worker moved no slots (handoff path untested)")
+        finally:
+            fleet.close()
+        # DES twin: a compute-heavy mini-storm under the elastic controller
+        # must resize, complete every task, and report its reap telemetry
+        el_cfg = dataclasses.replace(sim_config_for_variant("lci_prg0"),
+                                     name="lci_eprg0_2", elastic_progress=(0, 2))
+        r = octotiger(el_cfg, n_nodes=2, workers=6, total_subgrids=32,
+                      timesteps=3, task_compute=40e-6)
+        results["elastic_des"] = {
+            "tasks": r.tasks, "resizes": r.resizes,
+            "reap_ewma": r.reap_ewma, "reap_p99": r.reap_p99, "reap_high": r.reap_high,
+        }
+        if r.tasks != 32 * 3:
+            raise RuntimeError(f"elastic DES completed {r.tasks}/96 tasks")
+        if r.resizes < 1:
+            raise RuntimeError("elastic DES controller never resized under the storm")
+        print(f"smoke elastic ok  (fleet: {fleet.handoffs} handoffs, == fixed reference; "
+              f"DES: {r.resizes} resizes, p99 reap {r.reap_p99*1e6:.1f}us)")
+    except Exception as exc:  # noqa: BLE001
+        traceback.print_exc()
+        failures.append(f"elastic: {exc}")
 
     results["failures"] = failures
     results["elapsed"] = time.time() - t0

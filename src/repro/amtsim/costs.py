@@ -128,6 +128,15 @@ class Mechanisms:
     t_handle_parcel: float = 0.5 * US  # spawn the task, bookkeeping
     t_aggregate: float = 0.3 * US  # parcel queue lock + merge per parcel
 
+    # Elastic membership (ISSUE 8): control-plane costs of resizing a
+    # live worker pool.  Joining spawns/registers a worker (thread start +
+    # endpoint re-wire); draining quiesces in-flight work before the slot
+    # is released; a state handoff streams the departing worker's shard to
+    # its successor at registered-memory copy bandwidth.
+    t_worker_join: float = 5.0 * US
+    t_worker_drain: float = 3.0 * US
+    t_handoff_per_byte: float = 1.0 / 12e9
+
     def variant(self, **kw) -> "Mechanisms":
         return replace(self, **kw)
 

@@ -126,6 +126,14 @@ class SimConfig:
     # paper §3.3.4's omitted experiment: reserve n cores that ONLY drive
     # the progress engine (never execute tasks) — the lci_prg{n} family
     progress_workers: int = 0
+    # Elastic progress bounds (ISSUE 8, the lci_eprg{lo}_{hi} family): the
+    # dedicated pool starts at lo and an elastic controller grows/shrinks
+    # it between (lo, hi) from sampled reap occupancy, charging
+    # Mechanisms.t_worker_join / t_worker_drain per resize.
+    elastic_progress: Optional[Tuple[int, int]] = None
+    # DES-only: disable hysteresis + cooldown on the elastic controller —
+    # the naive oscillating baseline elasticity_study compares against.
+    elastic_hysteresis: bool = True
     # Protocol engine: payloads up to this size ship as ONE eager message
     # (bounce-buffer copy cost, no rendezvous round trip); 0 disables the
     # eager path beyond plain header piggybacking.
@@ -186,6 +194,7 @@ SHARED_CONFIG_FIELDS = (
     "lock_mode",
     "progress_mode",
     "progress_workers",
+    "elastic_progress",
     "eager_threshold",
     "agg_eager",
     "limits",
@@ -285,6 +294,7 @@ class _SimDevice:
         "inj_lock",
         "coarse",
         "cq",
+        "cq_times",
         "cq_accessors",
         "stats_injected",
         "inflight",
@@ -307,6 +317,7 @@ class _SimDevice:
         self.inj_lock = Lock(env)  # fine-grained send-queue lock (always present)
         self.coarse = Lock(env)  # coarse library lock (block/try variants)
         self.cq: List[Tuple[str, _Message]] = []
+        self.cq_times: List[float] = []  # enqueue stamps, parallel to cq
         self.cq_accessors = 0  # per-device CQ users (cq_scope='device')
         self.stats_injected = 0
         # bounded-injection state (§3.3.4)
@@ -461,6 +472,15 @@ class SimWorld:
         self.backpressure_events = 0  # EAGAIN-style post refusals (§3.3.4)
         self.rnr_events = 0  # receiver-not-ready arrival refusals
         self.rnr_retries = 0  # storm-mode retransmission attempts (§3.1)
+        # hardware-CQ residency (ISSUE 8): time each completion sat
+        # un-reaped — the elastic controller's feedback signal
+        self.reap_samples: List[float] = []
+        self.reap_lat_ewma = 0.0
+        self.reap_lat_high = 0.0
+        # elastic-pool telemetry
+        self.elastic_size = 0  # current dedicated workers per rank (elastic)
+        self.grows = 0
+        self.shrinks = 0
         if cfg.progress_workers >= workers_per_rank:
             # every core reserved for the engine leaves nobody to pop the
             # run queue: tasks would sit forever and the workload would
@@ -482,6 +502,19 @@ class SimWorld:
                     wk = SimWorker(r, w)
                     self.workers.append(wk)
                     self.env.process(wk.run())
+        # Elastic dedicated-worker pool (ISSUE 8, lci_eprg{lo}_{hi}): an
+        # ADDITIVE per-rank pool of progress-role workers the controller
+        # grows/shrinks between (lo, hi), charging Mechanisms costs per
+        # resize.  The static progress_workers/progress_mode policy above
+        # is untouched — elasticity rides on top of any base variant.
+        self._elastic_stops: List[Dict[str, bool]] = []
+        if cfg.elastic_progress is not None:
+            lo, hi = cfg.elastic_progress
+            if not 0 <= lo <= hi:
+                raise ValueError(f"elastic_progress bounds must satisfy 0 <= lo <= hi, got {(lo, hi)}")
+            for _ in range(lo):
+                self._grow_elastic()
+            self.env.process(self._elastic_controller(lo, hi))
 
     @property
     def engine(self) -> ProgressEngine:
@@ -498,6 +531,67 @@ class SimWorld:
             progressed = yield from self.background_work(wk, role=ROLE_PROGRESS)
             if not progressed:
                 yield Timeout(0.3e-6)
+
+    # -- elastic dedicated-worker pool (ISSUE 8) ----------------------------
+    def _grow_elastic(self) -> None:
+        """Add ONE progress-role worker to every rank, with a shared stop
+        flag so a later shrink retires exactly this cohort."""
+        stop = {"stopped": False}
+        self._elastic_stops.append(stop)
+        self.elastic_size += 1
+        for r in self.ranks:
+            wk = SimWorker(r, len(r.devices) + self.elastic_size, role=ROLE_PROGRESS)
+            self.env.process(self._elastic_worker(wk, stop))
+
+    def _elastic_worker(self, wk: SimWorker, stop: Dict[str, bool]) -> Generator:
+        while not self.stopped and not stop["stopped"]:
+            progressed = yield from self.background_work(wk, role=ROLE_PROGRESS)
+            if not progressed:
+                yield Timeout(0.3e-6)
+
+    def _elastic_controller(self, lo: int, hi: int) -> Generator:
+        """Sample hardware-CQ occupancy and resize the elastic pool between
+        (lo, hi).  With hysteresis the grow/shrink thresholds are split and
+        a cooldown separates consecutive resizes; the naive controller
+        (``elastic_hysteresis=False``) uses one threshold and no cooldown —
+        the oscillating baseline the study quantifies.  Each resize charges
+        the control-plane cost (t_worker_join / t_worker_drain)."""
+        interval = 10e-6
+        grow_at, shrink_at = 4.0, 1.0
+        cooldown = 50e-6
+        if not self.cfg.elastic_hysteresis:
+            shrink_at = grow_at
+            cooldown = 0.0
+        occ_ewma = 0.0
+        last_resize = -cooldown
+        while not self.stopped:
+            yield Timeout(interval)
+            occ = sum(len(d.cq) for r in self.ranks for d in r.devices) / max(len(self.ranks), 1)
+            occ_ewma += 0.3 * (occ - occ_ewma)
+            if self.env.now - last_resize < cooldown:
+                continue
+            if occ_ewma >= grow_at and self.elastic_size < hi:
+                yield Timeout(self.mech.t_worker_join)
+                self._grow_elastic()
+                self.grows += 1
+                last_resize = self.env.now
+            elif occ_ewma <= shrink_at and self.elastic_size > lo:
+                yield Timeout(self.mech.t_worker_drain)
+                self._elastic_stops.pop()["stopped"] = True
+                self.elastic_size -= 1
+                self.shrinks += 1
+                last_resize = self.env.now
+
+    @property
+    def resizes(self) -> int:
+        return self.grows + self.shrinks
+
+    def reap_p99(self) -> float:
+        """p99 of hardware-CQ residency over the whole run (seconds)."""
+        if not self.reap_samples:
+            return 0.0
+        s = sorted(self.reap_samples)
+        return s[min(len(s) - 1, int(0.99 * len(s)))]
 
     # --------------------------------------------------------------- helpers
     def injection_stats(self) -> Dict[str, int]:
@@ -783,7 +877,7 @@ class SimWorld:
             return
         if rs > 0:
             dst_dev.recv_backlog += 1
-        dst_dev.cq.append((kind, msg))
+        self._cq_push(dst_dev, kind, msg)
 
     def _rnr_retransmit(self, dst_dev: _SimDevice, kind: str, msg: _Message, attempt: int) -> Generator:
         """Storm-mode RNR retransmission: back off ``t_rnr_retry * 2^(n-1)``
@@ -799,7 +893,7 @@ class SimWorld:
             self.env.process(self._rnr_retransmit(dst_dev, kind, msg, attempt + 1))
             return
         dst_dev.recv_backlog += 1
-        dst_dev.cq.append((kind, msg))
+        self._cq_push(dst_dev, kind, msg)
 
     def _reap_arrival(self, dev: _SimDevice, kind: str) -> None:
         """Bookkeeping when a CQ entry is reaped: a consumed arrival frees
@@ -814,11 +908,28 @@ class SimWorld:
         while dev.rnr_parked and dev.recv_backlog < rs:
             pkind, pmsg = dev.rnr_parked.popleft()
             dev.recv_backlog += 1
-            dev.cq.append((pkind, pmsg))
+            self._cq_push(dev, pkind, pmsg)
 
     def _send_done_later(self, dev: _SimDevice, msg: _Message, delay: float) -> Generator:
         yield Timeout(delay)
-        dev.cq.append(("send_done", msg))
+        self._cq_push(dev, "send_done", msg)
+
+    # -- hardware-CQ residency: the reap-latency signal (ISSUE 8) -----------
+    def _cq_push(self, dev: _SimDevice, kind: str, msg: _Message) -> None:
+        """Every CQ entry is enqueue-stamped so the pop side can measure
+        how long completions sat un-reaped — the latency the elastic
+        controller reacts to and ``elasticity_study`` claims against."""
+        dev.cq.append((kind, msg))
+        dev.cq_times.append(self.env.now)
+
+    def _cq_pop(self, dev: _SimDevice) -> Tuple[str, _Message]:
+        entry = dev.cq.pop(0)
+        lat = self.env.now - dev.cq_times.pop(0)
+        self.reap_samples.append(lat)
+        self.reap_lat_ewma += 0.2 * (lat - self.reap_lat_ewma)
+        if lat > self.reap_lat_high:
+            self.reap_lat_high = lat
+        return entry
 
     # -------------------------------------------------------------- progress
     def background_work(self, worker: SimWorker, role: str = ROLE_TASK) -> Generator:
@@ -845,7 +956,7 @@ class SimWorld:
                 if name == "dev_cq":
                     dev = rank.devices[op[2]]
                     if dev.cq:
-                        ckind, msg = dev.cq.pop(0)
+                        ckind, msg = self._cq_pop(dev)
                         self._reap_arrival(dev, ckind)
                         yield Timeout(mech.t_per_completion)
                         result = (ckind, msg)
@@ -974,7 +1085,7 @@ class SimWorld:
         mech = self.mech
         rank = dev.rank
         while dev.cq:
-            ckind, msg = dev.cq.pop(0)
+            ckind, msg = self._cq_pop(dev)
             self._reap_arrival(dev, ckind)
             yield Timeout(mech.t_per_completion)
             if ckind == "send_done":

@@ -40,6 +40,13 @@ class MicroResult:
     send_queue_hw: int = 0
     bounce_in_use_hw: int = 0
     retry_queue_hw: int = 0
+    # hardware-CQ residency (ISSUE 8): time completions sat un-reaped —
+    # the elastic controller's signal — plus its resize count (zero for
+    # fixed variants)
+    reap_ewma: float = 0.0
+    reap_high: float = 0.0
+    reap_p99: float = 0.0
+    resizes: int = 0
 
     @property
     def rate(self) -> float:
@@ -62,6 +69,20 @@ class AppResult:
     send_queue_hw: int = 0
     bounce_in_use_hw: int = 0
     retry_queue_hw: int = 0
+    reap_ewma: float = 0.0
+    reap_high: float = 0.0
+    reap_p99: float = 0.0
+    resizes: int = 0
+
+
+def _reap_kwargs(world: SimWorld) -> dict:
+    """Reap-latency + elastic telemetry shared by every result type."""
+    return {
+        "reap_ewma": world.reap_lat_ewma,
+        "reap_high": world.reap_lat_high,
+        "reap_p99": world.reap_p99(),
+        "resizes": world.resizes,
+    }
 
 
 def _world(variant: str, n_ranks: int, workers: int, platform: Platform, mech: Mechanisms) -> SimWorld:
@@ -114,6 +135,7 @@ def flood(
         send_queue_hw=inj["send_queue_hw"],
         bounce_in_use_hw=inj["bounce_in_use_hw"],
         retry_queue_hw=inj["retry_queue_hw"],
+        **_reap_kwargs(world),
     )
 
 
@@ -177,6 +199,7 @@ def chains(
         send_queue_hw=inj["send_queue_hw"],
         bounce_in_use_hw=inj["bounce_in_use_hw"],
         retry_queue_hw=inj["retry_queue_hw"],
+        **_reap_kwargs(world),
     )
 
 
@@ -284,6 +307,7 @@ def octotiger(
         send_queue_hw=inj["send_queue_hw"],
         bounce_in_use_hw=inj["bounce_in_use_hw"],
         retry_queue_hw=inj["retry_queue_hw"],
+        **_reap_kwargs(world),
     )
 
 

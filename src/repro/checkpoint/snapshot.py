@@ -1,0 +1,96 @@
+"""In-memory snapshot codec for live state handoff (ISSUE 8).
+
+:mod:`repro.checkpoint.manager` serializes pytrees to *disk* for fault
+tolerance; a departing fleet worker needs the same self-describing,
+bit-exact encoding as **bytes over a CommChannel** so its KV-slot shard
+can move to a successor mid-decode.  Same dtype discipline as the
+manager: bf16 leaves travel as a uint16 view with the logical dtype
+recorded in the manifest, so the round trip is bit-identical.
+
+Wire format: ``b"RSNP"`` + 4-byte big-endian manifest length + manifest
+JSON + concatenated raw leaf bytes.  The manifest carries per-leaf
+dtype/shape/offset plus a JSON ``meta`` dict for scalar bookkeeping
+(request id, position, remaining budget) that rides along with the
+arrays.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .manager import _BF16, _flatten
+
+__all__ = ["pack_state", "unpack_state"]
+
+_MAGIC = b"RSNP"
+
+
+def pack_state(tree: Any, meta: Optional[Dict[str, Any]] = None) -> bytes:
+    """Serialize a pytree of arrays (+ JSON-able ``meta``) to bytes."""
+    manifest: Dict[str, Any] = {"meta": meta or {}, "leaves": {}}
+    blobs = []
+    offset = 0
+    for key, leaf in _flatten(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        dt = str(leaf.dtype) if hasattr(leaf, "dtype") else str(arr.dtype)
+        if dt == _BF16:
+            arr = arr.view(np.uint16) if arr.dtype != np.uint16 else arr
+        data = np.ascontiguousarray(arr).tobytes()
+        manifest["leaves"][key] = {
+            "dtype": dt,  # logical dtype (what the consumer sees)
+            "raw": str(arr.dtype),  # storage dtype (what the bytes are)
+            "shape": list(arr.shape),
+            "offset": offset,
+            "nbytes": len(data),
+        }
+        blobs.append(data)
+        offset += len(data)
+    mjson = json.dumps(manifest).encode()
+    return _MAGIC + struct.pack(">I", len(mjson)) + mjson + b"".join(blobs)
+
+
+def unpack_state(payload: bytes, abstract: Any = None) -> Tuple[Any, Dict[str, Any]]:
+    """Decode :func:`pack_state` bytes → ``(state, meta)``.
+
+    Without ``abstract``, ``state`` is a flat ``{tree-path: array}`` dict.
+    With ``abstract`` (a pytree of shape/dtype references, e.g. the
+    adopter's own freshly-allocated slot state) the original structure is
+    rebuilt onto it, failing loudly on any shape/dtype mismatch — the
+    manager's self-validating-restore contract applied to a live handoff.
+    """
+    if payload[:4] != _MAGIC:
+        raise ValueError("not a snapshot payload (bad magic)")
+    (mlen,) = struct.unpack(">I", payload[4:8])
+    manifest = json.loads(payload[8 : 8 + mlen].decode())
+    base = 8 + mlen
+    arrays: Dict[str, Any] = {}
+    for key, ent in manifest["leaves"].items():
+        lo = base + ent["offset"]
+        raw = np.frombuffer(payload[lo : lo + ent["nbytes"]], dtype=np.dtype(ent["raw"]))
+        arr = raw.reshape(ent["shape"])
+        if ent["dtype"] == _BF16:
+            arr = arr.view(jnp.bfloat16)
+        arrays[key] = arr
+    meta = manifest["meta"]
+    if abstract is None:
+        return arrays, meta
+    leaves = _flatten(abstract)
+    ordered = []
+    for key, ref in leaves:
+        if key not in arrays:
+            raise KeyError(f"snapshot missing leaf {key!r}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {key}: snapshot shape {arr.shape} != target {ref.shape}")
+        if str(ref.dtype) != manifest["leaves"][key]["dtype"]:
+            raise ValueError(
+                f"leaf {key}: snapshot dtype {manifest['leaves'][key]['dtype']} != target {ref.dtype}"
+            )
+        ordered.append(jnp.asarray(arr))
+    treedef = jax.tree_util.tree_structure(abstract)
+    return jax.tree_util.tree_unflatten(treedef, ordered), meta

@@ -68,6 +68,10 @@ class PostStatus(Enum):
     OK = "ok"
     EAGAIN_QUEUE = "eagain_queue"  # descriptor ring (send queue) full
     EAGAIN_BUFFER = "eagain_buffer"  # registered bounce-buffer pool exhausted
+    # the target rank is DRAINING or GONE under the membership layer
+    # (core/comm/membership.py): the post must be re-queued by the caller,
+    # never silently dropped — a lifecycle refusal, not a resource one
+    EAGAIN_DRAINING = "eagain_draining"
 
     def __bool__(self) -> bool:
         return self is PostStatus.OK

@@ -69,8 +69,9 @@ op                      meaning / expected result
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, replace
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 __all__ = [
     "LOCK_NONE",
@@ -230,16 +231,63 @@ class ProgressEngine:
     ``('deliver', n)``) pushed by the adapters via :meth:`record` — the
     engine-parity suite compares these across layers."""
 
+    #: EWMA smoothing for the reap statistics (one knob, shared with the DES)
+    REAP_EWMA_ALPHA = 0.2
+
     def __init__(self, policy: ProgressPolicy, router: CompletionRouter, ndevices: int = 1):
         self.policy = policy
         self.router = router
         self.ndevices = max(1, ndevices)
         self.trace: Optional[List[tuple]] = None
+        # cheap reap-side instrumentation (no per-item stamps, no trace
+        # entries — decision-trace parity is unaffected): gap between
+        # non-empty reap sweeps and items reaped per sweep, as EWMA +
+        # high-water.  The ElasticProgressController consumes these.
+        self._reap_last: Optional[float] = None
+        self._reap_gap_ewma = 0.0
+        self._reap_gap_high = 0.0
+        self._reap_occ_ewma = 0.0
+        self._reap_occ_high = 0
+        self._reap_sweeps = 0
+        self._reap_items = 0
 
     # -- decision trace ------------------------------------------------------
     def record(self, *event: Any) -> None:
         if self.trace is not None:
             self.trace.append(event)
+
+    # -- reap-latency instrumentation (§3.3.4 adaptivity signal) -------------
+    def _note_reap_sweep(self, n: int) -> None:
+        """Account one non-empty reap sweep: ``n`` items came off a
+        completion source in one batch."""
+        alpha = self.REAP_EWMA_ALPHA
+        now = time.monotonic()
+        if self._reap_last is not None:
+            gap = now - self._reap_last
+            self._reap_gap_ewma += alpha * (gap - self._reap_gap_ewma)
+            if gap > self._reap_gap_high:
+                self._reap_gap_high = gap
+        self._reap_last = now
+        self._reap_occ_ewma += alpha * (n - self._reap_occ_ewma)
+        if n > self._reap_occ_high:
+            self._reap_occ_high = n
+        self._reap_sweeps += 1
+        self._reap_items += n
+
+    def reap_latency_stats(self) -> Dict[str, float]:
+        """Cheap counters for the elastic-progress decision (and results
+        reporting): EWMA + high-water of the gap between non-empty reap
+        sweeps (wall seconds — meaningful on the functional layer; the DES
+        keeps its own sim-time latency) and of the per-sweep occupancy
+        (items per batch — backlog pressure, meaningful on both layers)."""
+        return {
+            "reap_gap_ewma": self._reap_gap_ewma,
+            "reap_gap_high": self._reap_gap_high,
+            "occupancy_ewma": self._reap_occ_ewma,
+            "occupancy_high": float(self._reap_occ_high),
+            "sweeps": float(self._reap_sweeps),
+            "items": float(self._reap_items),
+        }
 
     # -- the one step loop ---------------------------------------------------
     def step(self, wid: int, role: str = ROLE_TASK):
@@ -275,13 +323,17 @@ class ProgressEngine:
                     if not (yield ("dev_trylock", d)):
                         continue
                 yield ("reap_begin", src, d)
+                sweep_items = 0
                 for _ in range(src.batch):
                     item = yield ("reap", src, d)
                     if item is None:
                         break
                     polled = True
+                    sweep_items += 1
                     progressed = bool((yield ("dispatch", src, d, item))) or progressed
                 yield ("reap_end", src, d)
+                if sweep_items:
+                    self._note_reap_sweep(sweep_items)
                 if src.locked and pol.lock_mode != LOCK_NONE:
                     yield ("dev_unlock", d)
         # 5. implicit mode: progress only as a side effect of an *empty*

@@ -25,6 +25,7 @@ import time
 from collections import deque
 from typing import Any, Callable, List, Optional
 
+from .comm.membership import join_workers, spawn_worker
 from .comm.progress import run_step
 from .worker import set_worker_id
 
@@ -93,11 +94,12 @@ class AMTExecutor:
         self._states = [_WorkerState() for _ in range(n_workers)]
         self._stop = threading.Event()
         self._submit_rr = 0
+        # worker threads are spawned through the membership layer's
+        # ownership surface so lifecycle accounting (tools/check_api.py
+        # gate 7) sees every live worker in one place
         self._threads: List[threading.Thread] = []
         for w in range(n_workers):
-            t = threading.Thread(target=self._run, args=(w,), name=f"{name}-w{w}", daemon=True)
-            self._threads.append(t)
-            t.start()
+            self._threads.append(spawn_worker(self._run, name=f"{name}-w{w}", args=(w,)))
 
     # ------------------------------------------------------------------ API
     def submit(self, fn: Callable[..., Any], *args: Any, worker: Optional[int] = None) -> TaskFuture:
@@ -129,8 +131,7 @@ class AMTExecutor:
     def shutdown(self, wait: bool = True) -> None:
         self._stop.set()
         if wait:
-            for t in self._threads:
-                t.join(timeout=5.0)
+            join_workers(self._threads)
 
     def stats(self) -> dict:
         return {

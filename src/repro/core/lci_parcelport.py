@@ -56,11 +56,11 @@ parcel is in flight, so op state machines are never touched concurrently.
 from __future__ import annotations
 
 import threading
-import time
 import weakref
 from dataclasses import dataclass, field, replace
 from typing import Any, List, Optional, Tuple
 
+from .comm.membership import ElasticProgressController, ProgressWorkerPool
 from .comm.progress import (
     ROLE_PROGRESS,
     CompletionRouter,
@@ -115,6 +115,11 @@ class LCIPPConfig:
     # reserved to drive the progress engine, never executing tasks.  0 =
     # every worker polls (the paper's recommended configuration).
     progress_workers: int = 0
+    # Elastic progress bounds (ISSUE 8, the lci_eprg{lo}_{hi} family):
+    # (lo, hi) lets an ElasticProgressController grow/shrink the dedicated
+    # pool between the bounds from the engine's reap statistics; None
+    # keeps the pool fixed at progress_workers.
+    elastic_progress: Optional[Tuple[int, int]] = None
     aggregation: bool = False
     # Protocol engine: parcels with total_bytes <= eager_threshold ship as
     # one eager message; 0 disables the eager path entirely.  The default
@@ -161,26 +166,6 @@ class _RecvOp:
         self.nzc: Optional[bytes] = header.piggybacked_nzc
         self.zc_bufs: List[bytearray] = []
         self.idx = 0
-
-
-def _progress_worker_loop(pp_ref: "weakref.ref", stop: threading.Event) -> None:
-    """Body of one dedicated progress thread (§3.3.4, ``lci_prg{n}``).
-
-    Holds only a weak reference: when the owning parcelport is dropped
-    (worlds are short-lived in tests and benchmarks) the thread exits on
-    its own, so un-``close()``d worlds never leak spinning threads."""
-    idle = 0
-    while not stop.is_set():
-        pp = pp_ref()
-        if pp is None:
-            return
-        moved = pp.progress_work()
-        del pp  # drop the strong ref before sleeping so GC can collect
-        if moved:
-            idle = 0
-        else:
-            idle += 1
-            time.sleep(min(20e-6 * (1 + idle // 4), 2e-3))
 
 
 class LCIParcelport(Parcelport):
@@ -238,21 +223,22 @@ class LCIParcelport(Parcelport):
         )
         # Dedicated progress threads (lci_prg{n}): drive the engine's
         # progress role; task workers keep the implicit fallback poll, so
-        # delivery never depends on thread scheduling.
-        self._pw_stop: Optional[threading.Event] = None
-        self._pw_threads: List[threading.Thread] = []
-        if config.progress_workers > 0:
-            self._pw_stop = threading.Event()
-            ref = weakref.ref(self)
-            for i in range(config.progress_workers):
-                t = threading.Thread(
-                    target=_progress_worker_loop,
-                    args=(ref, self._pw_stop),
-                    name=f"lci-prg{rank}.{i}",
-                    daemon=True,
-                )
-                self._pw_threads.append(t)
-                t.start()
+        # delivery never depends on thread scheduling.  Thread lifecycle
+        # lives in the membership layer's ProgressWorkerPool; with
+        # elastic_progress=(lo, hi) an ElasticProgressController resizes
+        # the pool between the bounds from the engine's reap statistics.
+        self._pw_pool: Optional[ProgressWorkerPool] = None
+        self._elastic: Optional[ElasticProgressController] = None
+        initial = config.progress_workers
+        if config.elastic_progress is not None:
+            lo, hi = config.elastic_progress
+            initial = max(initial, lo)
+        if initial > 0 or config.elastic_progress is not None:
+            self._pw_pool = ProgressWorkerPool(weakref.ref(self), f"lci-prg{rank}")
+            self._pw_pool.resize(initial)
+            if config.elastic_progress is not None:
+                lo, hi = config.elastic_progress
+                self._elastic = ElasticProgressController(self.engine, self._pw_pool, lo, hi)
 
     def _make_devices(self, fabric: Fabric, config: LCIPPConfig) -> List[LCIDevice]:
         """Open this parcelport's communication backends (one per device
@@ -289,11 +275,8 @@ class LCIParcelport(Parcelport):
         tests construct many short-lived worlds); an explicit close joins
         them deterministically — the weakref loop remains only the GC
         backstop for worlds that never call it."""
-        if self._pw_stop is not None:
-            self._pw_stop.set()
-            for t in self._pw_threads:
-                t.join(timeout=5.0)
-            self._pw_threads = []
+        if self._pw_pool is not None:
+            self._pw_pool.close()
 
     def __enter__(self) -> "LCIParcelport":
         return self
@@ -457,7 +440,13 @@ class LCIParcelport(Parcelport):
     def background_work(self) -> bool:
         """One step of the SHARED progress engine (drain retries → progress
         → reap → dispatch); this parcelport only supplies op semantics."""
-        return run_step(self.engine, self, self._worker_device())
+        moved = run_step(self.engine, self, self._worker_device())
+        if self._elastic is not None:
+            # elastic progress (ISSUE 8): one cheap control decision per
+            # task-side pump — grow/shrink the dedicated pool between the
+            # configured bounds from the engine's reap statistics
+            self._elastic.maybe_resize()
+        return moved
 
     def progress_work(self) -> bool:
         """One dedicated-progress step (ROLE_PROGRESS): retries + device

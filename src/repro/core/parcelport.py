@@ -116,6 +116,11 @@ class World:
         self.localities = [Locality(r, self) for r in range(n_localities)]
         for loc in self.localities:
             loc.parcelport = parcelport_factory(loc, self.fabric)
+        # Optional lifecycle table (core.comm.membership): a consumer that
+        # tracks workers against this world attaches its Membership here so
+        # close() can run the abandoned-member liveness sweep BEFORE the
+        # parcelports release their resources.
+        self.membership: Optional[Any] = None
 
     def progress_all(self, rounds: int = 1) -> bool:
         """Drive every locality's background work (single-threaded pump,
@@ -130,7 +135,14 @@ class World:
     def close(self) -> None:
         """Release per-parcelport resources — in particular, stop and join
         any dedicated progress threads (``lci_prg{n}``) so repeated world
-        construction cannot accumulate live daemons."""
+        construction cannot accumulate live daemons.
+
+        Teardown ordering matters (ISSUE 8): the membership sweep runs
+        FIRST, so a tracked worker that died without ``leave()`` has its
+        ``on_gone`` hook return ring/shmem slots while the transports are
+        still alive; only then do the parcelports release resources."""
+        if self.membership is not None:
+            self.membership.sweep()
         for loc in self.localities:
             close = getattr(loc.parcelport, "close", None)
             if close is not None:

@@ -217,6 +217,21 @@ REGISTRY.register_family(VariantSpec(
     canonical=((2,),),
     doc="shared-memory put+queue backend with {n} dedicated progress workers",
 ))
+# elastic-progress family (ISSUE 8): the dedicated pool starts at lo and
+# an ElasticProgressController grows/shrinks it between (lo, hi) from the
+# engine's reap statistics — the adaptive answer to the §5.3 finding that
+# the right lci_prg{n} is workload-dependent.
+REGISTRY.register_family(VariantSpec(
+    grammar="lci_eprg{lo}_{hi}",
+    build=lambda name, lo, hi: LCIPPConfig(
+        name=name,
+        progress_workers=lo,
+        elastic_progress=(lo, hi),
+        progress_mode="explicit" if lo == 0 else "implicit",
+    ),
+    canonical=((0, 2),),
+    doc="elastic progress workers: pool adapts between {lo} and {hi} from reap occupancy",
+))
 # bounded-injection family (§3.3.4, ROADMAP follow-up): finite send ring +
 # bounce pool, both `depth` deep, through the shared resource model.
 REGISTRY.register_family(VariantSpec(
@@ -266,6 +281,22 @@ SERVE_REGISTRY.register_family(VariantSpec(
     build=lambda name, n: _fleet_cfg(name, n, "shmem"),
     canonical=((2,), (4,)),
     doc="router + {n} workers, responses ride one-sided put (shmem backend)",
+))
+
+
+def _elastic_fleet_cfg(name: str, workers: int):
+    from ..serve import FleetConfig
+
+    del name
+    # one spare pre-provisioned rank: join/leave cycles reuse it
+    return FleetConfig(workers=workers, transport="collective", max_workers=workers + 1)
+
+
+SERVE_REGISTRY.register_family(VariantSpec(
+    grammar="fleet_elastic_w{n}",
+    build=lambda name, n: _elastic_fleet_cfg(name, n),
+    canonical=((2,),),
+    doc="elastic fleet: {n} workers + one spare rank for membership join/leave",
 ))
 
 #: dict-compatible view of the fleet family (resolves members on demand).

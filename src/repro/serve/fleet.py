@@ -49,8 +49,10 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+from ..checkpoint.snapshot import pack_state, unpack_state
 from ..configs.base import ArchConfig
 from ..core.comm.collective import CollectiveGroup, CommChannel
+from ..core.comm.membership import GONE, Membership
 from ..core.comm.progress import (
     CompletionRouter,
     CompletionSource,
@@ -76,6 +78,12 @@ class FleetConfig:
     # per-worker admission-queue bound: a "new" request beyond this is
     # refused with a typed EAGAIN response (router re-queues, never drops)
     admission_depth: int = 2
+    # Elastic capacity (ISSUE 8): rank slots are pre-provisioned for up to
+    # max_workers workers (0 = fixed fleet of `workers`), so add_worker /
+    # leave_worker never rebuild the transport group — a departed rank's
+    # channel and shmem slab are REUSED by the next join, which is what
+    # keeps thread/segment counts flat over join/leave cycles.
+    max_workers: int = 0
     transport: str = "collective"  # 'inline' | 'collective' | 'shmem'
     # the ProgressPolicy.for_config axes, same as ServeConfig/LCIPPConfig
     progress_mode: str = "explicit"
@@ -106,8 +114,12 @@ class ModelWorker:
         self._pending: deque = deque()  # accepted, awaiting a free slot
         self._reqs: Dict[int, Request] = {}  # rid -> worker-side request
         self._open: Dict[int, bool] = {}  # rid -> more chunks expected
+        self._adopt_queue: deque = deque()  # handoff snapshots awaiting a slot
+        self._adopt_rids: set = set()  # rids whose snapshot awaits splicing
+        self._chunk_stash: Dict[int, List[tuple]] = {}  # chunks that outran an adopt
         self.outbox: List[tuple] = []  # (rid, tok, done) of this step
         self.eagain_refusals = 0
+        self.adoptions = 0  # slots adopted from departing workers
         self.rids_seen: List[int] = []  # admission order (stickiness proof)
 
     # --------------------------------------------------------- request plane
@@ -117,6 +129,7 @@ class ModelWorker:
         kind = msg[0]
         if kind == "new":
             _, rid, tokens, last, max_new = msg
+            self._chunk_stash.pop(rid, None)  # a re-dispatch replans all chunks
             if len(self._pending) >= self.admission_depth:
                 # typed admission backpressure: the worker's EAGAIN — the
                 # router re-queues the request, it is NEVER dropped here
@@ -128,10 +141,23 @@ class ModelWorker:
             self._pending.append(req)
             self.rids_seen.append(rid)
             return None
+        if kind == "adopt":
+            # a departing worker's slot, serialized by checkpoint.snapshot;
+            # queued (admission takes a free slot) and spliced in _admit —
+            # adoption has priority over new admissions: it is mid-stream
+            _, rid, payload = msg
+            self._adopt_queue.append(payload)
+            self._adopt_rids.add(rid)
+            return None
         assert kind == "chunk", kind
         _, rid, tokens, last = msg
         req = self._reqs.get(rid)
         if req is None:
+            if rid in self._adopt_rids:
+                # the chunk outran its slot's adoption (the snapshot waits
+                # for a free slot): stash it, applied at the splice
+                self._chunk_stash.setdefault(rid, []).append((list(tokens), last))
+                return None
             # orphan chunk of a refused request: the channel is FIFO per
             # direction, so these all precede any re-dispatched "new"
             return None
@@ -146,7 +172,27 @@ class ModelWorker:
         return None
 
     # ------------------------------------------------------------ decode plane
+    def _adopt(self) -> None:
+        while self._adopt_queue and self.core.free_slots():
+            state, meta = unpack_state(
+                self._adopt_queue.popleft(), abstract=self.core.abstract_slot_state()
+            )
+            req = Request(rid=meta["rid"], prompt=list(meta["prompt"]), max_new=meta["max_new"])
+            self._reqs[req.rid] = req
+            self._open[req.rid] = bool(meta.get("prefill_open", False))
+            self.core.adopt_slot(state, meta, req)
+            self.adoptions += 1
+            self._adopt_rids.discard(req.rid)
+            for tokens, last in self._chunk_stash.pop(req.rid, ()):
+                if self.core.prefilling(req.rid):
+                    self.core.feed_chunk(req.rid, list(tokens), last)
+                else:
+                    req.prompt.extend(tokens)
+                if last:
+                    self._open[req.rid] = False
+
     def _admit(self) -> None:
+        self._adopt()
         while self._pending and self.core.free_slots():
             req = self._pending[0]
             if self.core.prefill_chunk <= 0 and self._open.get(req.rid):
@@ -165,7 +211,7 @@ class ModelWorker:
         return self.core.step(self._emit)
 
     def busy(self) -> bool:
-        return bool(self._pending) or self.core.active()
+        return bool(self._pending) or bool(self._adopt_queue) or self.core.active()
 
 
 class Router:
@@ -178,26 +224,34 @@ class Router:
     def __init__(self, arch: ArchConfig, params: Any, cfg: Optional[FleetConfig] = None):
         self.cfg = cfg = FleetConfig() if cfg is None else cfg
         assert cfg.workers >= 1 and cfg.slots >= cfg.workers, (cfg.workers, cfg.slots)
-        per_worker = cfg.slots // cfg.workers
-        self.workers = [
-            ModelWorker(
-                w, arch, params, per_worker, cfg.context, cfg.max_prefill,
-                cfg.prefill_chunk, cfg.admission_depth,
-            )
-            for w in range(cfg.workers)
-        ]
+        self.arch, self.params = arch, params
+        self.max_workers = max(cfg.max_workers, cfg.workers)
+        self._per_worker_slots = cfg.slots // cfg.workers
+        # lifecycle is owned by the Membership subsystem (ISSUE 8): worker
+        # wid == member rank; routing consults the ACTIVE set, racing posts
+        # to a DRAINING rank resolve to typed EAGAIN, a worker that dies
+        # without leave() is reaped by the finalizer sweep at close()
+        self.membership = Membership()
+        self.workers: List[Optional[ModelWorker]] = [None] * self.max_workers
         self._rid = itertools.count()
         self._queue: deque = deque()  # un-routed (or re-queued) requests
         self._inflight: Dict[int, Request] = {}  # rid -> client-side request
         self._inflight_lock = threading.Lock()
         self._sticky: Dict[int, int] = {}  # rid -> admitting worker
         self._chunks: Dict[int, deque] = {}  # rid -> unsent chunk messages
-        self._outstanding = [0] * cfg.workers  # dispatched - (done|eagain)
+        self._orphans: deque = deque()  # handoff snapshots awaiting capacity
+        self._outstanding = [0] * self.max_workers  # dispatched - (done|eagain)
         self.eagain_events = 0  # worker refusals observed by the router
         self.requeues = 0
         self.completed = 0
         self.steps = 0
+        self.joins = 0
+        self.leaves = 0
+        self.handoffs = 0
         # ---- transport ----------------------------------------------------
+        # Rank slots are provisioned for max_workers up front: joins and
+        # leaves re-point routing, they NEVER rebuild the group — a
+        # departed rank's channel/slab is reused by the next join.
         self.group: Any = None
         self.channels: List[CommChannel] = []
         self.engine: Optional[ProgressEngine] = None
@@ -206,14 +260,14 @@ class Router:
                 from ..core.comm.shmem import ShmemGroup
 
                 self.group = ShmemGroup(
-                    1 + cfg.workers, 1, limits=cfg.limits, completion_mode="queue"
+                    1 + self.max_workers, 1, limits=cfg.limits, completion_mode="queue"
                 )
             else:
-                self.group = CollectiveGroup(1 + cfg.workers, 1, limits=cfg.limits)
+                self.group = CollectiveGroup(1 + self.max_workers, 1, limits=cfg.limits)
             # channel w: router (rank 0, the shared client endpoint) <->
             # worker w (rank 1+w); ALL channels land responses in channel
             # 0's queue — the router-owned landing slots
-            for w in range(cfg.workers):
+            for w in range(self.max_workers):
                 self.channels.append(
                     CommChannel(
                         limits=cfg.limits,
@@ -227,7 +281,7 @@ class Router:
             self.engine = ProgressEngine(
                 ProgressPolicy.for_config(cfg).variant(step_lock=True),
                 CompletionRouter(
-                    [CompletionSource(f"request:{w}") for w in range(cfg.workers)]
+                    [CompletionSource(f"request:{w}") for w in range(self.max_workers)]
                     + [CompletionSource("response")],
                     ndevices=1,
                 ),
@@ -236,6 +290,130 @@ class Router:
             self._step_lock = threading.Lock()
         else:
             assert cfg.transport == "inline", cfg.transport
+        for _ in range(cfg.workers):
+            self.add_worker(initial=True)
+
+    # ------------------------------------------------------- elastic lifecycle
+    def add_worker(self, initial: bool = False) -> int:
+        """Join a worker on a free rank slot (JOINING → ACTIVE); it picks
+        up routing share on the next router step.  The transport was
+        provisioned for ``max_workers`` at construction, so a join only
+        re-points routing — a departed rank's channel is reused."""
+        free = [w for w in range(self.max_workers) if self.membership.state(w) in (None, GONE)]
+        if not free:
+            raise ValueError(f"fleet is at max_workers={self.max_workers}")
+        wid = free[0]
+        worker = ModelWorker(
+            wid, self.arch, self.params, self._per_worker_slots, self.cfg.context,
+            self.cfg.max_prefill, self.cfg.prefill_chunk, self.cfg.admission_depth,
+        )
+        self.workers[wid] = worker
+        self.membership.join(wid, owner=worker, on_gone=self._on_worker_gone)
+        self.membership.activate(wid)
+        if not initial:
+            self.joins += 1
+        return wid
+
+    def leave_worker(self, wid: int) -> bool:
+        """Drain worker ``wid`` out of the live fleet: stop admitting,
+        pull its un-admitted requests back to the router queue, hand every
+        ACTIVE slot to a successor as a ``checkpoint.snapshot`` payload
+        over the existing channel (bit-identical continuation), then
+        deregister — the rank returns to the free pool.  Idempotent:
+        returns False if already DRAINING/GONE."""
+        if not any(w != wid for w in self.membership.active_ranks()):
+            raise ValueError("cannot drain the last active worker")
+        if not self.membership.begin_drain(wid):
+            return False
+        worker = self.workers[wid]
+        # 0) settle the wire: flush emitted tokens, then pump the channel
+        #    until nothing to/from the leaver is in flight — an in-flight
+        #    "new"/"chunk" must land in the worker's queues (and be drained
+        #    below), never die with the rank
+        self._flush_workers()
+        if self.channels:
+            for _ in range(10_000):
+                self._comm_step()
+                if not self.channels[wid].pending_work():
+                    break
+        # 1) drain the admission deque: un-admitted requests re-queue at
+        #    the router (they re-route by load — zero drops)
+        while worker._pending:
+            req = worker._pending.popleft()
+            worker._reqs.pop(req.rid, None)
+            worker._open.pop(req.rid, None)
+            self._outstanding[wid] -= 1
+            self._sticky.pop(req.rid, None)
+            self._chunks.pop(req.rid, None)  # re-planned on re-dispatch
+            with self._inflight_lock:
+                client_req = self._inflight.get(req.rid)
+            if client_req is not None:
+                self.requeues += 1
+                self._queue.append(client_req)
+        # 2) hand off every mid-decode slot, serialized + validated by the
+        #    snapshot codec; sticky routing follows the slot
+        for slot in worker.core.active_slots():
+            state, meta = worker.core.extract_slot(slot)
+            rid = meta["rid"]
+            worker._reqs.pop(rid, None)
+            worker._open.pop(rid, None)
+            self._outstanding[wid] -= 1
+            self._handoff(rid, pack_state(state, meta))
+        # un-adopted snapshots this worker still held travel onward too,
+        # with any chunks that outran them re-queued ahead of the plan
+        while worker._adopt_queue:
+            payload = worker._adopt_queue.popleft()
+            _, meta = unpack_state(payload)
+            rid = meta["rid"]
+            stash = worker._chunk_stash.pop(rid, None)
+            if stash:
+                rest = self._chunks.setdefault(rid, deque())
+                for tokens, last in reversed(stash):
+                    rest.appendleft(("chunk", rid, tokens, last))
+            self._outstanding[wid] -= 1
+            self._handoff(rid, payload)
+        # 3) quiesced: deregister, return the rank to the pool
+        self.membership.finish_leave(wid)
+        self.leaves += 1
+        return True
+
+    def _on_worker_gone(self, member) -> None:
+        # the GONE hook (leave OR abandon-sweep): the rank's worker slot
+        # returns to the pool; the channel/slab stay provisioned for reuse
+        self.workers[member.rank] = None
+
+    def _handoff(self, rid: int, payload: bytes) -> None:
+        dst = self._pick_successor()
+        if dst is None:
+            self._orphans.append((rid, payload))  # placed when capacity frees
+            return
+        self._sticky[rid] = dst
+        self._outstanding[dst] += 1
+        self.handoffs += 1
+        self._send(dst, ("adopt", rid, payload))
+
+    def _pick_successor(self) -> Optional[int]:
+        """The ACTIVE worker with the most genuinely free slots (free
+        minus queued admissions/adoptions); None if nobody has room."""
+        best, best_free = None, 0
+        for w in self.membership.active_ranks():
+            worker = self.workers[w]
+            free = len(worker.core.free_slots()) - len(worker._pending) - len(worker._adopt_queue)
+            if free > best_free:
+                best, best_free = w, free
+        return best
+
+    def _place_orphans(self) -> None:
+        for _ in range(len(self._orphans)):
+            rid, payload = self._orphans.popleft()
+            dst = self._pick_successor()
+            if dst is None:
+                self._orphans.appendleft((rid, payload))
+                return
+            self._sticky[rid] = dst
+            self._outstanding[dst] += 1
+            self.handoffs += 1
+            self._send(dst, ("adopt", rid, payload))
 
     # ------------------------------------------------------------------ client
     def submit(self, prompt: List[int], max_new: int = 16) -> Request:
@@ -261,16 +439,20 @@ class Router:
         )
         return ("new", req.rid, prompt[:chunk], False, req.max_new), rest
 
-    def _pick_worker(self) -> int:
-        """Free-slot-load routing: most headroom wins, ties to the lowest
-        worker id.  Dispatch is optimistic — the authoritative bound is
-        the worker's own admission queue (its EAGAIN, our re-queue)."""
-        per = self.cfg.slots // self.cfg.workers
+    def _pick_worker(self) -> Optional[int]:
+        """Free-slot-load routing over the ACTIVE membership: most
+        headroom wins, ties to the lowest worker id.  Dispatch is
+        optimistic — the authoritative bound is the worker's own admission
+        queue (its EAGAIN, our re-queue)."""
+        active = self.membership.active_ranks()
+        if not active:
+            return None
+        per = self._per_worker_slots
 
         def headroom(w: int) -> int:
             return per + self.cfg.admission_depth - self._outstanding[w]
 
-        return max(range(self.cfg.workers), key=lambda w: (headroom(w), -w))
+        return max(active, key=lambda w: (headroom(w), -w))
 
     def _send(self, wid: int, msg: tuple) -> None:
         if self.channels:
@@ -288,6 +470,9 @@ class Router:
         for _ in range(len(self._queue)):
             req = self._queue.popleft()
             wid = self._pick_worker()
+            if wid is None:
+                self._queue.append(req)  # no ACTIVE worker: wait, never drop
+                break
             new_msg, rest = self._plan(req)
             self._sticky[req.rid] = wid
             self._chunks[req.rid] = rest
@@ -302,7 +487,13 @@ class Router:
             if not rest:
                 del self._chunks[rid]
                 continue
-            self._send(self._sticky[rid], rest.popleft())
+            wid = self._sticky[rid]
+            if not self.membership.guard_post(wid):
+                # typed EAGAIN_DRAINING: the sticky worker is leaving —
+                # the chunk stays queued (its prefill state travels in the
+                # handoff snapshot, which re-points sticky), never dropped
+                continue
+            self._send(wid, rest.popleft())
 
     # -------------------------------------------------------- response plane
     def _handle_response(self, payload: bytes) -> None:
@@ -340,7 +531,7 @@ class Router:
 
     def _flush_workers(self) -> None:
         for w, worker in enumerate(self.workers):
-            if not worker.outbox:
+            if worker is None or not worker.outbox:
                 continue
             batch, worker.outbox = worker.outbox, []
             if self.channels:
@@ -371,7 +562,12 @@ class Router:
                 return True
             wid = int(src.split(":", 1)[1])
             self.channels[wid].repost("request")
-            refusal = self.workers[wid].handle_request(pickle.loads(rec.data))
+            worker = self.workers[wid]
+            if worker is None:
+                # raced a completed leave (the drain pump settles the wire,
+                # so this only guards against loss becoming a crash)
+                return True
+            refusal = worker.handle_request(pickle.loads(rec.data))
             if refusal is not None:
                 self.channels[wid].send_response(pickle.dumps([refusal]))
             return True
@@ -409,10 +605,12 @@ class Router:
         """One fleet iteration: pump the channels, route, step every
         worker's decode shard, flush token batches back."""
         self._comm_step()
+        self._place_orphans()
         self._route()
         worked = False
         for worker in self.workers:
-            worked = worker.step() or worked
+            if worker is not None:
+                worked = worker.step() or worked
         self._flush_workers()
         self._comm_step()
         self.steps += 1
@@ -420,10 +618,12 @@ class Router:
 
     @property
     def tokens_out(self) -> int:
-        return sum(w.core.tokens_out for w in self.workers)
+        return sum(w.core.tokens_out for w in self.workers if w is not None)
 
     def idle(self) -> bool:
-        if self._queue or self._chunks or any(w.busy() for w in self.workers):
+        if self._queue or self._chunks or self._orphans:
+            return False
+        if any(w.busy() for w in self.workers if w is not None):
             return False
         if self._inflight:
             return False
@@ -437,7 +637,11 @@ class Router:
     # --------------------------------------------------------------- teardown
     def close(self) -> None:
         """Release transport resources (idempotent) — the fleet lifecycle
-        leak regression cycles this 50×."""
+        leak regression cycles this 50×.  The membership liveness sweep
+        runs FIRST (teardown ordering, ISSUE 8): workers that died without
+        leave() have their on_gone hooks return their slots while the
+        transports are still alive."""
+        self.membership.sweep()
         if self.group is not None and hasattr(self.group, "close"):
             self.group.close()
         self.channels = []

@@ -297,6 +297,68 @@ class DecodeCore:
         self._last_tok[slot] = tok
         return tok
 
+    # ------------------------------------------------ slot handoff (ISSUE 8)
+    def extract_slot(self, slot: int) -> tuple:
+        """Snapshot one ACTIVE slot for handoff to another core and free
+        it.  Returns ``(state, meta)``: ``state`` is the slot's KV row in
+        the same single-slot structure as ``_fresh_row`` (the inverse of
+        ``_splice``'s leaf rule), ``meta`` the scalar scheduler state.
+        The cache write is position-addressed and batched-decode rows are
+        independent, so splicing these exact bits into ANY core's free
+        slot continues the token stream bit-identically."""
+        req = self._slots[slot]
+        assert req is not None, f"slot {slot} is empty"
+
+        def leaf(f, pc):
+            if f.ndim >= 2 and pc.shape[0] == f.shape[0]:
+                return jax.lax.dynamic_slice_in_dim(f, slot, 1, axis=1)
+            return pc
+
+        state = jax.tree.map(leaf, self.cache, self._fresh_row)
+        meta = {
+            "rid": req.rid,
+            "prompt": list(req.prompt),
+            "max_new": req.max_new,
+            "position": int(self._positions[slot]),
+            "remaining": int(self._remaining[slot]),
+            "last_tok": int(self._last_tok[slot]),
+            "prefill_queue": list(self._prefill_queue[slot]) if slot in self._prefill_queue else None,
+            "prefill_open": bool(self._prefill_open.get(slot, False)),
+        }
+        self._slots[slot] = None
+        self._rid_slot.pop(req.rid, None)
+        self._prefill_queue.pop(slot, None)
+        self._prefill_open.pop(slot, None)
+        return state, meta
+
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self._slots) if r is not None]
+
+    def adopt_slot(self, state: Any, meta: Dict[str, Any], req: Optional[Request] = None) -> int:
+        """Splice a handed-off slot (from :meth:`extract_slot`, possibly
+        round-tripped through ``checkpoint.snapshot``) into the lowest
+        free slot and resume its schedule exactly where it stopped.  Pass
+        ``req`` when the caller tracks its own request object (the fleet
+        worker does); emissions will carry it."""
+        slot = self.free_slots()[0]
+        self.cache = self._splice(self.cache, state, slot)
+        if req is None:
+            req = Request(rid=meta["rid"], prompt=list(meta["prompt"]), max_new=meta["max_new"])
+        self._slots[slot] = req
+        self._positions[slot] = meta["position"]
+        self._remaining[slot] = meta["remaining"]
+        self._last_tok[slot] = meta["last_tok"]
+        self._rid_slot[req.rid] = slot
+        if meta.get("prefill_queue") is not None:
+            self._prefill_queue[slot] = deque(meta["prefill_queue"])
+            self._prefill_open[slot] = meta["prefill_open"]
+        return slot
+
+    def abstract_slot_state(self) -> Any:
+        """Shape/dtype reference for validating an incoming handoff
+        snapshot (``unpack_state(..., abstract=...)``)."""
+        return self._fresh_row
+
 
 class InferenceServer:
     def __init__(self, arch: ArchConfig, params: Any, cfg: Optional[ServeConfig] = None):

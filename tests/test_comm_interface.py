@@ -371,3 +371,11 @@ def test_check_api_put_capability_gate_green():
     failures: list = []
     _load_check_api().check_put_capability(failures)
     assert not failures, failures
+
+
+def test_check_api_membership_gate_green():
+    """Gate 7 (ISSUE 8): worker threads are spawned/joined only through
+    the membership nursery, so the lifecycle census stays exact."""
+    failures: list = []
+    _load_check_api().check_membership_thread_ownership(failures)
+    assert not failures, failures

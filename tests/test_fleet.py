@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import SMOKES
+from repro.core.comm.membership import GONE
 from repro.core.comm.resources import ResourceLimits
 from repro.core.comm.shmem import live_segments
 from repro.models import decode_step, init_cache, init_params
@@ -272,3 +273,139 @@ def test_fleet_single_worker_degenerates_to_single_host(model):
     ref = _run_single(model)
     out, _ = _run_fleet(model, "collective", workers=1)
     assert out == ref
+
+
+# ------------------------------------------------ elastic fleet (ISSUE 8)
+@pytest.mark.parametrize("transport", ["inline", "collective", "shmem"])
+def test_fleet_mid_decode_leave_bit_identical(model, transport):
+    """THE elastic acceptance gate: a worker leaves MID-DECODE, its KV
+    slots hand off to a successor as checkpoint.snapshot payloads over the
+    existing channel, and every request's token stream stays bit-identical
+    to the single-host reference — zero drops, on every backend."""
+    ref = _run_single(model)
+    arch, params = model
+    fleet = Fleet(
+        arch, params,
+        FleetConfig(workers=2, slots=4, context=64, transport=transport, max_workers=3),
+    )
+    try:
+        reqs = [fleet.submit(p, max_new=m) for p, m in TRACE]
+        for _ in range(3):
+            fleet.step()  # decode genuinely underway on worker 0
+        fleet.add_worker()  # the successor joins on the spare rank...
+        assert fleet.leave_worker(0) is True  # ...and worker 0 drains out
+        fleet.run_until_idle()
+        assert all(r.done_event.is_set() for r in reqs), "leave dropped a request"
+        assert [r.out_tokens for r in reqs] == ref  # bit-identical continuation
+        assert fleet.completed == len(TRACE)
+        assert fleet.handoffs >= 1  # slots really moved mid-stream
+        assert (fleet.joins, fleet.leaves) == (1, 1)
+        assert fleet.membership.state(0) == GONE
+        assert sum(w.adoptions for w in fleet.workers if w is not None) == fleet.handoffs
+    finally:
+        fleet.close()
+
+
+@pytest.mark.parametrize("transport", ["inline", "collective"])
+def test_fleet_mid_prefill_leave_chunked(model, transport):
+    """A leave while chunked prefill is still streaming: the snapshot
+    carries the open prefill queue, sticky chunk routing re-points to the
+    adopter, and a chunk that outran the splice is stashed — streams stay
+    reference-identical."""
+    ref = _run_single(model, chunk=4)
+    arch, params = model
+    fleet = Fleet(
+        arch, params,
+        FleetConfig(workers=2, slots=4, context=64, transport=transport,
+                    prefill_chunk=4, max_workers=3),
+    )
+    try:
+        reqs = [fleet.submit(p, max_new=m) for p, m in TRACE]
+        fleet.step()  # prompts admitted, chunk plans still draining
+        fleet.add_worker()
+        fleet.leave_worker(0)
+        fleet.run_until_idle()
+        assert all(r.done_event.is_set() for r in reqs)
+        assert [r.out_tokens for r in reqs] == ref
+        assert fleet.completed == len(TRACE)
+    finally:
+        fleet.close()
+
+
+def test_fleet_join_leave_cycles_threads_segments_flat(model):
+    """25 join/leave cycles against a live shmem fleet: the spare rank's
+    pre-provisioned channel/slab is REUSED every cycle, so the process
+    thread count and the live shmem-segment census never move."""
+    arch, params = model
+    fleet = Fleet(
+        arch, params,
+        FleetConfig(workers=2, slots=4, context=64, transport="shmem", max_workers=3),
+    )
+    try:
+        wid = fleet.add_worker()  # warm one full cycle (jit, channels)
+        fleet.leave_worker(wid)
+        r = fleet.submit([1, 2, 3], max_new=2)
+        fleet.run_until_idle()
+        assert r.done_event.is_set()
+        threads0, segs0 = threading.active_count(), live_segments()
+        ranks = set()
+        for i in range(25):
+            ranks.add(fleet.add_worker())
+            if i % 5 == 0:  # serve through some cycles, not just churn
+                req = fleet.submit([2, 3, 4], max_new=2)
+            fleet.leave_worker(2)
+            fleet.run_until_idle()
+            assert threading.active_count() == threads0
+            assert live_segments() == segs0
+        assert ranks == {2}  # the same rank slot every cycle — true reuse
+        assert fleet.joins == 26 and fleet.leaves == 26
+        assert fleet.completed == 6  # warm + 5 churn-cycle requests, zero lost
+    finally:
+        fleet.close()
+
+
+def test_fleet_abandoned_worker_swept_and_rank_reused(model):
+    """Satellite regression: a fleet worker that dies WITHOUT leave() is
+    reaped by the membership finalizer sweep — its rank returns to the
+    pool and the fleet keeps serving."""
+    import gc
+
+    arch, params = model
+    fleet = Fleet(
+        arch, params,
+        FleetConfig(workers=2, slots=4, context=64, transport="inline", max_workers=3),
+    )
+    try:
+        w = fleet.workers[1]
+        fleet.workers[1] = None  # the router's strong ref goes away...
+        del w  # ...and the worker dies with no leave()
+        gc.collect()
+        assert fleet.membership.sweep() == [1]
+        assert fleet.membership.state(1) == GONE
+        assert fleet.membership.active_ranks() == (0,)
+        assert fleet.add_worker() == 1  # the abandoned rank is reusable
+        r = fleet.submit([1, 2, 3], max_new=2)
+        fleet.run_until_idle()
+        assert r.done_event.is_set()
+    finally:
+        fleet.close()
+
+
+def test_fleet_leave_edge_cases(model):
+    """Double leave is idempotent; the last active worker may not leave;
+    a full fleet refuses further joins."""
+    arch, params = model
+    fleet = Fleet(
+        arch, params,
+        FleetConfig(workers=2, slots=4, context=64, transport="inline", max_workers=2),
+    )
+    try:
+        assert fleet.leave_worker(1) is True
+        assert fleet.leave_worker(1) is False  # idempotent no-op
+        with pytest.raises(ValueError, match="last active"):
+            fleet.leave_worker(0)
+        assert fleet.add_worker() == 1  # GONE rank rejoins...
+        with pytest.raises(ValueError, match="max_workers"):
+            fleet.add_worker()  # ...but the fleet is bounded
+    finally:
+        fleet.close()

@@ -265,10 +265,10 @@ def test_prg_threads_join_on_close():
     # idempotent, and usable as a context manager
     world = World(2, make_parcelport_factory("lci_prg2"), devices_per_rank=2)
     pp = world.localities[0].parcelport
-    assert len(pp._pw_threads) == 2
+    assert pp._pw_pool is not None and pp._pw_pool.size() == 2
     with pp:
         pass
-    assert pp._pw_threads == [] and pp._pw_stop.is_set()
+    assert pp._pw_pool.size() == 0
     pp.close()
     world.close()
     assert threading.active_count() <= base + 1

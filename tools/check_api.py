@@ -57,6 +57,18 @@ surface:
    protocol engine selects paths from what the transport *advertises*,
    never from what it *is*.
 
+Since ISSUE 8 the gate also protects worker-lifecycle ownership:
+
+7. **One thread nursery** — worker threads (progress workers, fleet
+   workers, the executor's task workers) are spawned and joined ONLY
+   through ``core/comm/membership.py`` (``spawn_worker`` /
+   ``join_workers`` / ``ProgressWorkerPool``); no module in ``serve/``,
+   ``amtsim/``, the executor, or the parcelports may call
+   ``threading.Thread(`` directly — otherwise the membership census
+   (``live_worker_count``, the abandoned-member sweep) silently
+   undercounts.  Benchmark *client* load generators (``launch/serve.py``)
+   are not workers and are exempt.
+
 Exit code is nonzero on any failure; failures are listed one per line.
 """
 from __future__ import annotations
@@ -270,12 +282,47 @@ def check_put_capability(failures: list) -> None:
             )
 
 
+def check_membership_thread_ownership(failures: list) -> None:
+    """Gate 7: worker threads are spawned/joined only via the membership
+    nursery (``core/comm/membership.py``) so the lifecycle census stays
+    exact — no stray ``threading.Thread(`` beside it."""
+    src = REPO / "src" / "repro"
+    nursery = src / "core" / "comm" / "membership.py"
+    # the nursery itself owns the primitive; client load generators in
+    # launch/serve.py simulate external users, not tracked workers
+    exempt = {nursery, src / "launch" / "serve.py"}
+    for path in sorted(src.rglob("*.py")):
+        if path in exempt:
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            if line.lstrip().startswith("#"):
+                continue
+            if "threading.Thread(" in line or "Thread(target=" in line:
+                failures.append(
+                    f"{path.relative_to(REPO)}:{lineno}: spawns a raw thread — "
+                    "worker lifecycle belongs to membership.spawn_worker / "
+                    "ProgressWorkerPool (the census must see every worker)"
+                )
+    # the two biggest thread consumers must actually ride the nursery
+    for rel, needle in (
+        ("core/executor.py", "spawn_worker"),
+        ("core/executor.py", "join_workers"),
+        ("core/lci_parcelport.py", "ProgressWorkerPool"),
+    ):
+        if needle not in (src / rel).read_text():
+            failures.append(
+                f"src/repro/{rel}: does not use membership.{needle} — "
+                "worker threads must go through the one nursery"
+            )
+
+
 def main() -> int:
     failures: list = []
     check_api(failures)
     check_progress_engine(failures)
     check_serving_comm(failures)
     check_put_capability(failures)
+    check_membership_thread_ownership(failures)
     for f in failures:
         print(f"FAIL: {f}")
     print(f"check_api: {len(failures)} failure(s)")
