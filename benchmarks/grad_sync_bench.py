@@ -1,0 +1,172 @@
+"""Device data plane (§Perf): fused quantize+pack vs the replaced host
+gradient-sync pipeline, plus the roofline placement of the fused kernel.
+
+The replaced pipeline did three walks over the gradient tree — the
+``compress_grads_int8_ef`` per-leaf jit map, the ``tree.transpose`` split,
+and a host ``pack_grads`` of the *dequantized f32* leaves — and shipped
+f32 bytes.  The fused path (:mod:`repro.kernels.grad_pack`) does the
+error-feedback add + per-tensor int8 quantize + pack in ONE compiled
+program emitting one flat device buffer, and ships int8 + scales: ~4x
+fewer wire bytes and one device→host transfer.
+
+Claims (wired into ``--claims-strict`` CI):
+
+* throughput — fused pack beats the replaced pipeline by >=2x at the
+  4 MiB gradient point (transformer-like tree, d=88 x 12 layers);
+* wire bytes — the quantized wire is >=3.5x smaller than the f32 wire;
+* roofline — the fused kernel is bandwidth-bound on the deployment HW
+  model (:class:`repro.roofline.analysis.HW`): arithmetic intensity far
+  below the ridge, memory term >=90% of the modeled kernel time.  The
+  flop/byte counts are per element: 9 f32 ops (ef-add, abs, max, div,
+  round, 2x clip, sub, mul) over 13 bytes moved (read g + ef, write q +
+  ef), AI ~= 0.69 — two decimal orders under the ridge, so the kernel's
+  job is to saturate HBM, which is exactly what the single fused pass
+  over tiles is for.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.grad_pack import pack_grads_fused, unpack_grads_fused
+from repro.roofline.analysis import HW
+from repro.train.grad_sync import compress_grads_int8_ef, pack_grads
+
+from .common import Claim, save_result, table
+
+# (d, layers) ladder of transformer-like gradient trees; the 4 MiB point
+# (d=88, 12 layers, 72 leaves, 4.26 MiB of f32 gradients) carries the
+# throughput claim.
+LADDER = ((40, 6), (88, 12), (120, 12))
+CLAIM_POINT = (88, 12)
+
+# Fused-kernel roofline accounting, per gradient element (f32):
+#   flops: ef-add, abs, max-reduce, divide, round, clip(2), sub, mul = 9
+#   bytes: read g(4) + read ef(4) + write q(1) + write ef(4) = 13
+FLOPS_PER_ELEM = 9.0
+BYTES_PER_ELEM = 13.0
+
+
+def _grad_tree(d: int, layers: int, seed: int = 0):
+    """Transformer-ish gradient pytree: 12*d^2 + 2*d params per layer."""
+    rng = np.random.default_rng(seed)
+
+    def t(*shape):
+        return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+    return {
+        f"layer{i}": {
+            "wqkv": t(d, 3 * d), "wo": t(d, d),
+            "w1": t(d, 4 * d), "w2": t(4 * d, d),
+            "ln1": t(d), "ln2": t(d),
+        }
+        for i in range(layers)
+    }
+
+
+def _zeros_ef(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def _old_pipeline(tree, ef):
+    """The replaced path: per-leaf EF quantize map + transpose split +
+    host pack of the dequantized f32 leaves."""
+    deq, new_ef = compress_grads_int8_ef(tree, ef)
+    return pack_grads(deq), new_ef
+
+
+def _fused_pipeline(tree, ef):
+    return pack_grads_fused(tree, ef)
+
+
+def _best_of(fn, tree, reps: int):
+    """Best-of-reps wall time for one pack call (fresh EF each rep so the
+    work is identical); returns (seconds, wire_bytes)."""
+    best = float("inf")
+    nbytes = 0
+    for _ in range(reps):
+        ef = _zeros_ef(tree)
+        jax.block_until_ready(jax.tree.leaves(ef))
+        t0 = time.perf_counter()
+        data, new_ef = fn(tree, ef)
+        jax.block_until_ready(jax.tree.leaves(new_ef))
+        best = min(best, time.perf_counter() - t0)
+        nbytes = len(data)
+    return best, nbytes
+
+
+def roofline_placement(hw: HW = HW()) -> dict:
+    """Analytic placement of the fused kernel on the deployment roofline
+    (per-element counts, size-independent)."""
+    ai = FLOPS_PER_ELEM / BYTES_PER_ELEM
+    ridge = hw.peak_flops / hw.hbm_bw
+    compute_s = FLOPS_PER_ELEM / hw.peak_flops  # per element
+    memory_s = BYTES_PER_ELEM / hw.hbm_bw
+    return {
+        "arithmetic_intensity": ai,
+        "ridge": ridge,
+        "memory_fraction": memory_s / (memory_s + compute_s),
+        "bound": "memory" if ai < ridge else "compute",
+    }
+
+
+def run(fast: bool = False) -> dict:
+    reps = 3 if fast else 6
+    ladder = (CLAIM_POINT,) if fast else LADDER
+    rows = []
+    data: dict = {"points": {}}
+    ratio_at_claim = wire_ratio_at_claim = 0.0
+    for d, layers in ladder:
+        tree = _grad_tree(d, layers, seed=d)
+        # warm both compilation caches outside the timed region
+        _old_pipeline(tree, _zeros_ef(tree))
+        _fused_pipeline(tree, _zeros_ef(tree))
+        t_old, b_old = _best_of(_old_pipeline, tree, reps)
+        t_new, b_new = _best_of(_fused_pipeline, tree, reps)
+        # correctness spot check while we're here: the wire round-trips
+        back = unpack_grads_fused(_fused_pipeline(tree, _zeros_ef(tree))[0], tree)
+        assert jax.tree.structure(back) == jax.tree.structure(tree)
+        mib = b_old / 2**20
+        ratio = t_old / max(t_new, 1e-12)
+        wire_ratio = b_old / max(b_new, 1)
+        data["points"][f"d{d}x{layers}"] = {
+            "grad_mib": mib, "old_s": t_old, "fused_s": t_new,
+            "speedup": ratio, "old_wire_bytes": b_old, "fused_wire_bytes": b_new,
+            "wire_reduction": wire_ratio,
+        }
+        if (d, layers) == CLAIM_POINT:
+            ratio_at_claim, wire_ratio_at_claim = ratio, wire_ratio
+        rows.append({
+            "point": f"d={d} L={layers}", "grads": f"{mib:.2f}MiB",
+            "old": f"{t_old*1e3:.1f}ms", "fused": f"{t_new*1e3:.1f}ms",
+            "speedup": f"{ratio:.2f}x", "wire": f"{wire_ratio:.2f}x smaller",
+        })
+    roof = roofline_placement()
+    data["roofline"] = roof
+    claims = [
+        Claim("§Perf", "fused device pack >=2x over replaced host pipeline at 4MiB",
+              2.0, ratio_at_claim),
+        Claim("§Perf", "quantized wire >=3.5x smaller than the f32 wire",
+              3.5, wire_ratio_at_claim),
+        Claim("§Roofline", "fused pack AI below the ridge (bandwidth-bound)",
+              roof["ridge"], roof["arithmetic_intensity"], direction="<="),
+        Claim("§Roofline", "memory term >=90% of modeled fused-kernel time",
+              0.9, roof["memory_fraction"]),
+    ]
+    print(table(rows, ["point", "grads", "old", "fused", "speedup", "wire"],
+                "Grad-sync pack: replaced pipeline vs fused device kernel"))
+    print(f"roofline: AI={roof['arithmetic_intensity']:.2f} flop/B, "
+          f"ridge={roof['ridge']:.0f}, {roof['bound']}-bound "
+          f"(memory term {roof['memory_fraction']*100:.1f}% of modeled time)")
+    print(table([c.row() for c in claims], ["figure", "claim", "paper", "achieved", "status"]))
+    payload = {**data, "claims": [c.row() for c in claims]}
+    save_result("grad_sync_bench", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run(fast="--fast" in sys.argv)

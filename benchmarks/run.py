@@ -20,7 +20,10 @@ streams identical to the single-host reference, and the elastic-capacity
 path (ISSUE 8) must survive a mid-decode worker leave with a
 checkpointed KV handoff — bit-identical tokens, zero drops — while the
 reap-latency telemetry (functional engine + DES controller) lands in the
-smoke JSON.  Results land in ``experiments/bench/smoke.json``
+smoke JSON, and the fused grad-pack kernel (ISSUE 9) must emit wire
+bytes bit-identical to the host reference in both CI lowerings while
+the staged ``'jax'`` hand-off batches a whole drain into one device
+transfer.  Results land in ``experiments/bench/smoke.json``
 (the CI artifact) and the exit code is non-zero on any failure.
 """
 from __future__ import annotations
@@ -35,6 +38,7 @@ from . import (
     factor_concurrency,
     factor_devices,
     factor_multithreading,
+    grad_sync_bench,
     latency,
     message_rate,
     octotiger_scaling,
@@ -55,6 +59,7 @@ BENCHMARKS = {
     "factor_multithreading": factor_multithreading.run,  # Fig 8
     "factor_devices": factor_devices.run,  # Fig 9
     "roofline_report": roofline_report.run,  # framework §Roofline
+    "grad_sync_bench": grad_sync_bench.run,  # §Perf device data plane
 }
 
 SMOKE_SEED = 0  # deterministic: the workloads take explicit seeds, no RNG here
@@ -380,6 +385,48 @@ def smoke() -> int:
     except Exception as exc:  # noqa: BLE001
         traceback.print_exc()
         failures.append(f"elastic: {exc}")
+
+    # 11. device data plane (ISSUE 9): the fused quantize+pack kernel's
+    # wire bytes must be BIT-identical to the host reference in both CI
+    # lowerings (xla and pallas-interpret), and the staged 'jax' hand-off
+    # must batch a whole drain into one device transfer
+    try:
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.core.comm.collective import CommChannel
+        from repro.kernels.grad_pack import pack_grads_fused
+        from repro.train.grad_sync import pack_grads_q8
+
+        rng = np.random.default_rng(SMOKE_SEED)
+        tree = {"w": jnp.asarray(rng.standard_normal((70, 30)), jnp.float32),
+                "b": jnp.asarray(rng.standard_normal((11,)), jnp.float32)}
+        ef = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+        want, _ = pack_grads_q8(tree, ef)
+        parity = {}
+        for mode in ("xla", "pallas-interpret"):
+            got, _ = pack_grads_fused(tree, ef, mode=mode)
+            parity[mode] = got == want
+            if not parity[mode]:
+                raise RuntimeError(f"grad_pack {mode} wire bytes diverged from host reference")
+        staged = CommChannel(stage="jax")
+        for s in SMOKE_PAYLOAD_SIZES:
+            staged.send_request(bytes([s % 251]) * s)
+        staged.progress()
+        st = staged.group.stats
+        if st.staged_batches != 1 or st.staged_bytes != sum(SMOKE_PAYLOAD_SIZES):
+            raise RuntimeError(
+                f"jax stage did not batch the drain: {st.staged_batches} batches, "
+                f"{st.staged_bytes} bytes")
+        results["grad_pack"] = {"parity": parity, "wire_bytes": len(want),
+                                "staged_batches": st.staged_batches,
+                                "staged_bytes": st.staged_bytes}
+        print(f"smoke grad_pack ok  (xla+interpret == host, {len(want)}B wire; "
+              f"1 staged batch / {st.staged_bytes}B)")
+    except Exception as exc:  # noqa: BLE001
+        traceback.print_exc()
+        failures.append(f"grad_pack: {exc}")
 
     results["failures"] = failures
     results["elapsed"] = time.time() - t0

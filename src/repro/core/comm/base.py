@@ -94,7 +94,11 @@ def is_aggregate(parcel: Parcel) -> bool:
 
 
 def split_aggregate(parcel: Parcel) -> List[Parcel]:
-    buf = parcel.nzc_chunk.data
+    # memoryview slices, not bytes slices: the aggregate buffer is already
+    # immutable, so each sub-parcel's nzc chunk can be a zero-copy view —
+    # ``bytes(nzc)`` here used to copy every sub-payload a second time
+    # (pinned by the allocation-count test in tests/test_grad_pack.py).
+    buf = memoryview(parcel.nzc_chunk.data)
     (magic, n) = struct.unpack_from("<BI", buf, 0)
     assert magic == AGG_MAGIC, "parcel flagged as aggregate lacks the framing magic"
     off = 5
@@ -112,7 +116,7 @@ def split_aggregate(parcel: Parcel) -> List[Parcel]:
                 parcel_id=parcel.parcel_id | ((i + 1) << AGG_SUB_SHIFT),
                 source=parcel.source,
                 dest=parcel.dest,
-                nzc_chunk=Chunk(bytes(nzc)),
+                nzc_chunk=Chunk(nzc),
                 zc_chunks=list(chunks),
             )
         )

@@ -155,17 +155,46 @@ class CollectiveGroup:
     def endpoint(self, rank: int, dev: int = 0) -> "CollectiveComm":
         return self._endpoints[(rank, dev)]
 
-    def _stage_payload(self, data: bytes) -> bytes:
+    def _stage_payload(self, data: bytes) -> Any:
         """Move one payload through the configured stage.  ``'jax'`` rides
         the accelerator runtime: host → device buffer → host, the one-host
         degenerate form of an all-to-all over the collectives layer."""
-        if self.stage == "loopback":
-            return data
+        return self._stage_batch([data])[0]
+
+    def _stage_batch(self, datas: List[bytes]) -> List[Any]:
+        """Move a whole aggregation drain through the stage at once.
+
+        The ``'jax'`` stage used to round-trip every message through its
+        own device buffer — one ``device_put``/``device_get`` pair per
+        message, exactly the per-message software overhead the paper's
+        data-plane argument is about (§5).  A drain now concatenates the
+        batch into ONE staged device buffer: one transfer each way per
+        batch, sliced back into zero-copy views on return.
+        :class:`~repro.core.fabric.FabricStats` counts the staged bytes
+        and batches (``staged_bytes`` / ``staged_batches``)."""
+        if self.stage == "loopback" or not datas:
+            return datas
         import jax
         import numpy as np
 
-        arr = jax.device_put(np.frombuffer(data, dtype=np.uint8))
-        return np.asarray(jax.device_get(arr)).tobytes()
+        sizes = [len(d) for d in datas]
+        total = sum(sizes)
+        flat = np.empty((total,), dtype=np.uint8)
+        off = 0
+        for d, n in zip(datas, sizes):
+            flat[off : off + n] = np.frombuffer(d, dtype=np.uint8)
+            off += n
+        arr = jax.device_put(flat)
+        back = memoryview(np.asarray(jax.device_get(arr)).data)
+        with self._stats_lock:
+            self.stats.staged_bytes += total
+            self.stats.staged_batches += 1
+        out: List[bytes] = []
+        off = 0
+        for n in sizes:
+            out.append(back[off : off + n])
+            off += n
+        return out
 
 
 def collective_group_for(fabric: Any, devices_per_rank: int = 1, stage: str = "loopback") -> CollectiveGroup:
@@ -301,29 +330,35 @@ class CollectiveComm:
         then match arrivals waiting in this endpoint's inbox."""
         self.progress_calls += 1
         moved = False
-        for _ in range(max_completions):
-            with self._send_lock:
-                if not self._outbox:
-                    break
-                t = self._outbox.popleft()
-            payload = self.group._stage_payload(t.data)
-            dest = self.group.endpoint(t.dst_rank, t.dst_dev)
-            with dest._inbox_lock:
-                dest._inbox.append((self.rank, t.tag, payload))
-            st = self.group.stats
-            with self.group._stats_lock:
-                st.messages += 1
-                st.sends += 1
-                st.bytes += len(payload) + FRAME_OVERHEAD
-                if t.eager:
-                    st.eager_msgs += 1
-                else:
-                    st.rendezvous_msgs += 1
-            with self._send_lock:
-                self._inflight -= 1
-                if t.bounce:
-                    self._bounce_free += 1
-            complete(t.comp, _Record(op="send", tag=t.tag, ctx=t.ctx))
+        # Drain the whole batch of posted transits first, then stage them
+        # through the transport in ONE device-buffer round trip (see
+        # CollectiveGroup._stage_batch) — one transfer per drain instead of
+        # one per message.  Delivery, stats, and completion signalling stay
+        # per message, in post order.
+        batch: List[_Transit] = []
+        with self._send_lock:
+            while self._outbox and len(batch) < max_completions:
+                batch.append(self._outbox.popleft())
+        if batch:
+            payloads = self.group._stage_batch([t.data for t in batch])
+            for t, payload in zip(batch, payloads):
+                dest = self.group.endpoint(t.dst_rank, t.dst_dev)
+                with dest._inbox_lock:
+                    dest._inbox.append((self.rank, t.tag, payload))
+                st = self.group.stats
+                with self.group._stats_lock:
+                    st.messages += 1
+                    st.sends += 1
+                    st.bytes += len(payload) + FRAME_OVERHEAD
+                    if t.eager:
+                        st.eager_msgs += 1
+                    else:
+                        st.rendezvous_msgs += 1
+                with self._send_lock:
+                    self._inflight -= 1
+                    if t.bounce:
+                        self._bounce_free += 1
+                complete(t.comp, _Record(op="send", tag=t.tag, ctx=t.ctx))
             moved = True
         for _ in range(max_completions):
             with self._inbox_lock:

@@ -75,6 +75,8 @@ class FabricStats:
     eager_msgs: int = 0  # messages shipped through the eager protocol
     rendezvous_msgs: int = 0  # header/follow-up (rendezvous) messages
     backpressure_events: int = 0  # EAGAIN-style post rejections
+    staged_bytes: int = 0  # payload bytes moved through staged device buffers
+    staged_batches: int = 0  # device-buffer staging round trips (1 per drain)
 
 
 @dataclass

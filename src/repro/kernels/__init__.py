@@ -2,10 +2,13 @@
 
 The paper itself is a host-networking study with no device kernels; these
 kernels belong to the *training/serving framework* built around it: flash
-attention, the Mamba2 SSD intra-chunk block, and the MoE grouped matmul.
-Each has a pure-jnp oracle in :mod:`ref` and is validated with
+attention, the Mamba2 SSD intra-chunk block, the MoE grouped matmul, and
+the fused gradient quantize+pack of the device data plane (ISSUE 9).
+Each has a pure-jnp oracle (:mod:`ref`, or the host reference in
+:mod:`repro.train.grad_sync` for the pack kernel) and is validated with
 ``interpret=True`` on CPU; the BlockSpecs are the TPU deployment config.
 """
+from .grad_pack import pack_grads_fused, packed_nbytes, unpack_grads_fused
 from .ops import attention, expert_ffn_matmul, flash_attention, grouped_matmul, kernel_mode, ssd_chunk_kernel
 
 __all__ = [
@@ -14,5 +17,8 @@ __all__ = [
     "flash_attention",
     "grouped_matmul",
     "kernel_mode",
+    "pack_grads_fused",
+    "packed_nbytes",
     "ssd_chunk_kernel",
+    "unpack_grads_fused",
 ]

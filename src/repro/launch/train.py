@@ -31,6 +31,9 @@ def main() -> int:
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--remat", default="none")
     ap.add_argument("--grad-sync", default="auto", choices=["auto", "int8_ef"])
+    ap.add_argument("--grad-pack", default="host", choices=["host", "device"],
+                    help="explicit-DP wire packer: host reference loop or the "
+                         "fused device kernel (bit-identical wire bytes)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--production", action="store_true", help="bind the 16x16 production mesh")
@@ -39,7 +42,8 @@ def main() -> int:
 
     arch = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     hp = OptHParams(lr_peak=args.lr, warmup_steps=max(args.steps // 10, 1), total_steps=args.steps)
-    tcfg = TrainConfig(microbatches=args.microbatches, remat=args.remat, grad_sync=args.grad_sync)
+    tcfg = TrainConfig(microbatches=args.microbatches, remat=args.remat,
+                       grad_sync=args.grad_sync, grad_pack=args.grad_pack)
     run = TrainerConfig(
         batch=args.batch,
         seq=args.seq,

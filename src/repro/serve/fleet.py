@@ -42,7 +42,6 @@ layer and the sharding move the bytes, not the math.
 from __future__ import annotations
 
 import itertools
-import pickle
 import threading
 import time
 from collections import deque
@@ -61,6 +60,7 @@ from ..core.comm.progress import (
     run_step,
 )
 from ..core.comm.resources import ResourceLimits
+from ..core.comm.wire import decode_msg, encode_msg
 from .server import DecodeCore, Request
 
 __all__ = ["FleetConfig", "ModelWorker", "Router", "Fleet"]
@@ -456,11 +456,11 @@ class Router:
 
     def _send(self, wid: int, msg: tuple) -> None:
         if self.channels:
-            self.channels[wid].send_request(pickle.dumps(msg))
+            self.channels[wid].send_request(encode_msg(msg))
         else:  # inline: same messages, no serialization hop
             refusal = self.workers[wid].handle_request(msg)
             if refusal is not None:
-                self._handle_response(pickle.dumps([refusal]))
+                self._handle_response(encode_msg([refusal]))
 
     def _route(self) -> None:
         # new (and re-queued) requests: route by load, send first chunk.
@@ -498,7 +498,7 @@ class Router:
     # -------------------------------------------------------- response plane
     def _handle_response(self, payload: bytes) -> None:
         now = time.monotonic()
-        for item in pickle.loads(payload):
+        for item in decode_msg(payload):
             if item[0] == "eagain":
                 _, wid, rid = item
                 self.eagain_events += 1
@@ -535,9 +535,9 @@ class Router:
                 continue
             batch, worker.outbox = worker.outbox, []
             if self.channels:
-                self.channels[w].send_response(pickle.dumps(batch))
+                self.channels[w].send_response(encode_msg(batch))
             else:
-                self._handle_response(pickle.dumps(batch))
+                self._handle_response(encode_msg(batch))
 
     # -------------------------------------------- the engine's op adapter
     def execute(self, op: tuple) -> Any:
@@ -567,9 +567,9 @@ class Router:
                 # raced a completed leave (the drain pump settles the wire,
                 # so this only guards against loss becoming a crash)
                 return True
-            refusal = worker.handle_request(pickle.loads(rec.data))
+            refusal = worker.handle_request(decode_msg(rec.data))
             if refusal is not None:
-                self.channels[wid].send_response(pickle.dumps([refusal]))
+                self.channels[wid].send_response(encode_msg([refusal]))
             return True
         if kind == "progress":
             moved = False

@@ -31,7 +31,6 @@ the token-stream equivalence tests exact rather than approximate.
 from __future__ import annotations
 
 import itertools
-import pickle
 import threading
 import time
 from collections import deque
@@ -46,6 +45,7 @@ from ..configs.base import ArchConfig
 from ..core.comm.collective import CommChannel
 from ..core.comm.progress import ProgressEngine, ProgressPolicy, run_step
 from ..core.comm.resources import ResourceLimits
+from ..core.comm.wire import decode_msg, encode_msg
 from ..models import decode_step, init_cache, prefill
 
 __all__ = ["ServeConfig", "Request", "DecodeCore", "InferenceServer"]
@@ -420,7 +420,7 @@ class InferenceServer:
                 self._inflight[req.rid] = req
             # the request crosses the comm layer as bytes; EAGAIN parks it
             # in the channel throttle, retried by the engine step
-            self._channel.send_request(pickle.dumps((req.rid, req.prompt, req.max_new)))
+            self._channel.send_request(encode_msg((req.rid, req.prompt, req.max_new)))
         return req
 
     # -------------------------------------------- the engine's op adapter
@@ -438,7 +438,7 @@ class InferenceServer:
                 return True  # send completion: slot already recycled
             ch.repost(rec.ctx)  # keep the pre-post depth
             if rec.ctx == "request":
-                rid, prompt, max_new = pickle.loads(rec.data)
+                rid, prompt, max_new = decode_msg(rec.data)
                 self._pending.append(Request(rid=rid, prompt=prompt, max_new=max_new))
             else:  # response: a token batch for the client side
                 self._apply_response(rec.data)
@@ -473,7 +473,7 @@ class InferenceServer:
         ``_inflight``, and must never report true while another driver
         thread is still mid-application."""
         now = time.monotonic()
-        for rid, tok, done in pickle.loads(payload):
+        for rid, tok, done in decode_msg(payload):
             with self._inflight_lock:
                 req = self._inflight.get(rid)
             if req is None:
@@ -507,7 +507,7 @@ class InferenceServer:
         if self._channel is None or not self._outbox:
             return False
         batch, self._outbox = self._outbox, []
-        self._channel.send_response(pickle.dumps(batch))
+        self._channel.send_response(encode_msg(batch))
         return True
 
     # ----------------------------------------------------------------- engine

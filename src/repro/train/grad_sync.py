@@ -15,19 +15,52 @@ gradients through :class:`~repro.core.comm.interface.CommInterface` verbs
 backpressure and progress machinery as the parcelport study — asserted by
 the round-trip test in ``tests/test_train.py``.
 
+Wire format (ISSUE 9): a versioned length-prefixed binary header from
+:mod:`repro.core.comm.wire` replaces the old pickle stream.  Two kinds
+share the header:
+
+* ``KIND_RAW`` — leaf bytes concatenated tightly in leaf order
+  (:func:`pack_grads`); int8 leaves stay int8 (the 4× reduction).
+* ``KIND_Q8`` — the *quantized* wire: offset table + per-tensor scales +
+  tile-padded int8 payload (:func:`pack_grads_q8`).  This host path is the
+  byte-exact reference for the fused device kernel in
+  :mod:`repro.kernels.grad_pack` — same padding, same f32 quantize math —
+  which is what makes "device pack == host pack" a falsifiable parity
+  test rather than a tolerance check.
+
+Copy discipline: leaves that are already contiguous host arrays go to the
+wire as buffer *views* (no ``np.asarray`` copies); the only allocation is
+the joined output buffer itself.  Pinned by the allocation-count test in
+``tests/test_grad_pack.py``.
+
 Convergence is validated in ``tests/test_train.py`` (loss decreases within
 tolerance of the uncompressed baseline on a smoke config).
 """
 from __future__ import annotations
 
-import pickle
-from typing import Any, Tuple
+import struct
+from typing import Any, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["compress_grads_int8_ef", "pack_grads", "unpack_grads"]
+from ..core.comm import wire
+
+__all__ = [
+    "compress_grads_int8_ef",
+    "pack_grads",
+    "unpack_grads",
+    "pack_grads_q8",
+    "make_packer",
+]
+
+_F32_EPS = np.float32(1e-12)
+# Reciprocal multiply, NOT division: jit backends strength-reduce
+# division-by-constant into `x * (1/127)`, which differs from IEEE
+# division by 1 ulp for some inputs.  Using the multiply explicitly in
+# every path (host / XLA / Mosaic) keeps the scale bytes identical.
+_F32_RECIP127 = np.float32(1.0) / np.float32(127.0)
 
 
 def _q(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -58,17 +91,117 @@ def compress_grads_int8_ef(grads: Any, ef: Any) -> Tuple[Any, Any]:
     return deq, new_ef
 
 
+def _host_leaf(leaf: Any) -> np.ndarray:
+    """Bring a leaf to a contiguous host array without copying when it
+    already is one (C-contiguous ndarray → same object)."""
+    a = np.asarray(leaf)
+    return a if a.flags["C_CONTIGUOUS"] else np.ascontiguousarray(a)
+
+
 def pack_grads(tree: Any) -> bytes:
-    """Serialize a gradient pytree's leaves to wire bytes for the
-    host-side DP hand-off over CommInterface verbs.  Structure travels
-    out of band (both ranks hold the same model), so the wire carries
-    only the arrays — int8 leaves stay int8 (the 4× reduction)."""
-    leaves = jax.tree.leaves(tree)
-    return pickle.dumps([np.asarray(leaf) for leaf in leaves])
+    """Serialize a gradient pytree's leaves to ``KIND_RAW`` wire bytes for
+    the host-side DP hand-off over CommInterface verbs.  Structure travels
+    out of band (both ranks hold the same model), so the wire carries only
+    the arrays — int8 leaves stay int8 (the 4× reduction).  Contiguous
+    host leaves are joined as views, not copies."""
+    arrs = [_host_leaf(leaf) for leaf in jax.tree.leaves(tree)]
+    specs = [wire.leaf_spec(a) for a in arrs]
+    parts: List[Any] = [wire.encode_grad_header(wire.KIND_RAW, specs)]
+    for a in arrs:
+        if a.nbytes:
+            parts.append(a.reshape(-1).view(np.uint8).data)
+    return b"".join(parts)
 
 
-def unpack_grads(data: bytes, like: Any) -> Any:
-    """Rebuild a gradient pytree from :func:`pack_grads` bytes using the
-    receiver's own structure (``like``)."""
-    leaves = [jnp.asarray(a) for a in pickle.loads(data)]
+def unpack_grads(data, like: Any) -> Any:
+    """Rebuild a gradient pytree from wire bytes using the receiver's own
+    structure (``like``).  Dispatches on the header kind: ``KIND_RAW``
+    payloads restore original dtypes; ``KIND_Q8`` payloads dequantize to
+    f32 leaves (matching :func:`compress_grads_int8_ef`'s output dtype).
+    Leaf arrays are zero-copy views over ``data``."""
+    buf = memoryview(data)
+    kind, specs, off = wire.parse_grad_header(buf)
+    leaves: List[Any] = []
+    if kind == wire.KIND_RAW:
+        for s in specs:
+            a = np.frombuffer(buf, dtype=s.dtype, count=s.nelems, offset=off)
+            leaves.append(jnp.asarray(a.reshape(s.shape)))
+            off += s.nbytes
+    elif kind == wire.KIND_Q8:
+        n = len(specs)
+        off += 4 * n  # offset table (recomputable from specs; skipped)
+        scales = np.frombuffer(buf, dtype=np.float32, count=n, offset=off)
+        off += 4 * n
+        for s, scale in zip(specs, scales):
+            q = np.frombuffer(buf, dtype=np.int8, count=s.nelems, offset=off)
+            deq = q.astype(np.float32) * scale
+            leaves.append(jnp.asarray(deq.reshape(s.shape)))
+            off += wire.padded_nelems(s.nelems)
+    else:
+        raise ValueError(f"unknown gradient wire kind {kind}")
     return jax.tree.unflatten(jax.tree.structure(like), leaves)
+
+
+def _q8_host(g32: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.float32]:
+    """Host-reference int8 quantize — the same f32 ops, in the same order,
+    as the device kernel, so the bytes are bit-comparable (max reductions
+    are exact; elementwise f32 add/div/round are IEEE; numpy and XLA both
+    round half-to-even).  The error feedback is ``(r - q) * scale`` with
+    the multiply LAST — the ``g32 - q*scale`` form lets jit backends
+    contract multiply+subtract into a single-rounding fma that numpy's
+    two-rounding sequence cannot reproduce bitwise."""
+    maxabs = np.max(np.abs(g32)) if g32.size else np.float32(0.0)
+    scale = np.float32(np.maximum(maxabs, _F32_EPS) * _F32_RECIP127)
+    r = g32 / scale
+    q = np.clip(np.round(r), -127, 127).astype(np.int8)
+    ef = (r - q.astype(np.float32)) * scale
+    return q, ef, scale
+
+
+def pack_grads_q8(tree: Any, ef: Any) -> Tuple[bytes, Any]:
+    """Host reference for the fused device pack: error-feedback add +
+    per-tensor int8 quantize + pack into one ``KIND_Q8`` wire buffer
+    (offset table + scales + tile-padded payload).  Returns
+    ``(wire_bytes, new_ef_tree)``.  The device kernel in
+    :mod:`repro.kernels.grad_pack` must reproduce these bytes exactly."""
+    leaves = jax.tree.leaves(tree)
+    ef_leaves = jax.tree.leaves(ef)
+    specs = []
+    q_segs: List[bytes] = []
+    scales: List[np.float32] = []
+    new_ef: List[Any] = []
+    for g, e in zip(leaves, ef_leaves):
+        g32 = _host_leaf(g).astype(np.float32, copy=False) + _host_leaf(e)
+        q, ef_leaf, scale = _q8_host(g32)
+        spec = wire.leaf_spec(g, quantized=True)
+        specs.append(spec)
+        scales.append(scale)
+        pad = wire.padded_nelems(spec.nelems) - spec.nelems
+        seg = q.reshape(-1).view(np.uint8).data
+        q_segs.append(seg if pad == 0 else bytes(seg) + b"\x00" * pad)
+        new_ef.append(ef_leaf)
+    offs = wire.q8_offsets(specs)
+    parts: List[Any] = [
+        wire.encode_grad_header(wire.KIND_Q8, specs),
+        struct.pack(f"<{len(offs)}I", *offs),
+        struct.pack(f"<{len(scales)}f", *[float(s) for s in scales]),
+    ]
+    parts.extend(q_segs)
+    data = b"".join(parts)
+    return data, jax.tree.unflatten(jax.tree.structure(tree), new_ef)
+
+
+def make_packer(kind: str = "host"):
+    """Resolve the explicit-DP wire packer for ``TrainConfig.grad_pack``:
+    ``'host'`` is the numpy reference loop (:func:`pack_grads_q8`),
+    ``'device'`` the fused kernel (:func:`repro.kernels.grad_pack.
+    pack_grads_fused`, one compiled program + one transfer).  Both emit
+    bit-identical ``KIND_Q8`` wire bytes, so the knob is a pure
+    performance choice — flipping it mid-run cannot perturb training."""
+    if kind == "host":
+        return pack_grads_q8
+    if kind == "device":
+        from ..kernels.grad_pack import pack_grads_fused
+
+        return pack_grads_fused
+    raise ValueError(f"grad_pack must be 'host' or 'device', got {kind!r}")

@@ -35,6 +35,13 @@ class TrainConfig:
     microbatches: int = 1
     remat: str = "dots"  # 'none' | 'full' | 'dots' | 'dots_no_batch'
     grad_sync: str = "auto"  # 'auto' (GSPMD) | 'int8_ef' (explicit compression)
+    # Which packer the explicit-DP wire hand-off uses: 'host' = the numpy
+    # reference loop, 'device' = the fused Pallas quantize+pack kernel
+    # (bit-identical wire bytes; see grad_sync.make_packer).
+    grad_pack: str = "host"
+
+    def __post_init__(self):
+        assert self.grad_pack in ("host", "device"), self.grad_pack
 
     def variant(self, **kw) -> "TrainConfig":
         return dataclasses.replace(self, **kw)

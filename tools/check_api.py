@@ -69,10 +69,22 @@ Since ISSUE 8 the gate also protects worker-lifecycle ownership:
    undercounts.  Benchmark *client* load generators (``launch/serve.py``)
    are not workers and are exempt.
 
+Since ISSUE 9 the gate also protects the wire format:
+
+8. **No pickle on the wire** — everything that crosses the comm layer is
+   the versioned binary format from ``core/comm/wire.py`` (grad header +
+   typed message codec); ``train/grad_sync.py``, ``core/comm/``, and
+   ``serve/`` may not import or call ``pickle`` (AST-checked, so
+   docstrings that merely *mention* pickle don't trip it).  Pickle's
+   self-describing stream is both slower and version-fragile, and a
+   pickling hop would silently break the fused kernel's bit-parity
+   contract with the host pack path.
+
 Exit code is nonzero on any failure; failures are listed one per line.
 """
 from __future__ import annotations
 
+import ast
 import dataclasses
 import sys
 from pathlib import Path
@@ -316,6 +328,38 @@ def check_membership_thread_ownership(failures: list) -> None:
             )
 
 
+def check_no_pickle_wire(failures: list) -> None:
+    """Gate 8: wire-path modules carry the versioned binary format from
+    ``core/comm/wire.py`` — no pickle imports or calls (AST-based: a
+    docstring mentioning pickle is documentation, not a violation)."""
+    src = REPO / "src" / "repro"
+    wire_paths = (
+        [src / "train" / "grad_sync.py"]
+        + sorted((src / "core" / "comm").rglob("*.py"))
+        + sorted((src / "serve").rglob("*.py"))
+    )
+    for path in wire_paths:
+        try:
+            tree = ast.parse(path.read_text())
+        except SyntaxError as exc:  # pragma: no cover - tier-1 would fail first
+            failures.append(f"{path.relative_to(REPO)}: unparseable ({exc})")
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import) and any(a.name.split(".")[0] == "pickle" for a in node.names):
+                offender = "import pickle"
+            elif isinstance(node, ast.ImportFrom) and (node.module or "").split(".")[0] == "pickle":
+                offender = "from pickle import"
+            elif isinstance(node, ast.Name) and node.id == "pickle":
+                offender = "pickle reference"
+            else:
+                continue
+            failures.append(
+                f"{path.relative_to(REPO)}:{node.lineno}: {offender} — wire-path "
+                "modules must use the versioned binary format in core/comm/wire.py "
+                "(encode_msg/decode_msg, grad headers), never pickle"
+            )
+
+
 def main() -> int:
     failures: list = []
     check_api(failures)
@@ -323,6 +367,7 @@ def main() -> int:
     check_serving_comm(failures)
     check_put_capability(failures)
     check_membership_thread_ownership(failures)
+    check_no_pickle_wire(failures)
     for f in failures:
         print(f"FAIL: {f}")
     print(f"check_api: {len(failures)} failure(s)")
