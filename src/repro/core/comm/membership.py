@@ -44,6 +44,7 @@ from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 from collections import deque
 
+from ...analysis.sanitizer import make_lock, note_access
 from .interface import PostStatus
 
 __all__ = [
@@ -157,7 +158,7 @@ class Membership:
     rare relative to data movement, so a plain mutex is the right tool."""
 
     def __init__(self) -> None:
-        self._lock = threading.Lock()
+        self._lock = make_lock("Membership._lock")
         self._members: Dict[int, Member] = {}
         self._epoch = 0
         #: ranks reaped by the finalizer backstop, awaiting sweep()
@@ -169,6 +170,8 @@ class Membership:
 
     # -- transitions ---------------------------------------------------------
     def _bump(self, member: Member, state: str, kind: str) -> None:
+        # all transitions come through here, under self._lock
+        note_access("Membership._members", id(self))
         self._epoch += 1
         member.state = state
         member.epoch = self._epoch
@@ -258,12 +261,15 @@ class Membership:
         return self._epoch
 
     def state(self, rank: int) -> Optional[str]:
-        member = self._members.get(rank)
-        return member.state if member is not None else None
+        with self._lock:
+            note_access("Membership._members", id(self))
+            member = self._members.get(rank)
+            return member.state if member is not None else None
 
     def view(self) -> MembershipView:
         """An epoch-stamped immutable snapshot for routing decisions."""
         with self._lock:
+            note_access("Membership._members", id(self))
             return MembershipView(self._epoch, {r: m.state for r, m in self._members.items()})
 
     def active_ranks(self) -> Tuple[int, ...]:
@@ -275,20 +281,24 @@ class Membership:
         (or unknown) rank is refused with the *typed*
         ``EAGAIN_DRAINING`` — the caller re-queues, exactly like a
         resource EAGAIN, and nothing is ever lost to a leave."""
-        member = self._members.get(rank)
-        if member is None or member.state in (DRAINING, GONE):
-            return PostStatus.EAGAIN_DRAINING
-        return PostStatus.OK
+        with self._lock:
+            note_access("Membership._members", id(self))
+            member = self._members.get(rank)
+            if member is None or member.state in (DRAINING, GONE):
+                return PostStatus.EAGAIN_DRAINING
+            return PostStatus.OK
 
     def admit_completion(self, rank: int, view_epoch: int) -> bool:
         """Completion-side race arbiter: a completion dispatched under a
         view older than the member's last transition is stale — discarded
         exactly once (counted), never double-processed."""
-        member = self._members.get(rank)
-        if member is None or (member.state == GONE and view_epoch < member.epoch):
-            self.stale_discards += 1
-            return False
-        return True
+        with self._lock:
+            note_access("Membership._members", id(self))
+            member = self._members.get(rank)
+            if member is None or (member.state == GONE and view_epoch < member.epoch):
+                self.stale_discards += 1
+                return False
+            return True
 
     def drain_events(self) -> List[Tuple[str, int, int]]:
         """Pop and return every pending lifecycle event (consumer side)."""

@@ -57,6 +57,7 @@ import weakref
 from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
+from ...analysis.sanitizer import make_lock, note_access
 from .interface import (
     Capabilities,
     CompletionTarget,
@@ -165,12 +166,12 @@ class ShmemSegment:
             self._finalizer = weakref.finalize(
                 self, _release_segment, None, self._mmap, self.buf
             )
-        self._lock = threading.Lock()
+        self._lock = make_lock("ShmemSegment._lock")
         self._free: deque = deque(range(nslots))
         # The completion ring for queue-announced arrivals (put+queue-
         # completion descriptors and two-sided exchanges).
         self._rxq: deque = deque()
-        self._rxq_lock = threading.Lock()
+        self._rxq_lock = make_lock("ShmemSegment._rxq_lock")
         self._closed = False
 
     # ------------------------------------------------------- slot accounting
@@ -178,6 +179,7 @@ class ShmemSegment:
         """Claim one free slot (None = receiver slab exhausted — the
         caller surfaces ``EAGAIN_BUFFER``)."""
         with self._lock:
+            note_access("ShmemSegment.slots", id(self))
             return self._free.popleft() if self._free else None
 
     def free_slots(self) -> int:
@@ -198,6 +200,7 @@ class ShmemSegment:
         written bytes visible (``_ST_SIG``: discovered by scanning;
         ``_ST_WRITTEN``: announced through the descriptor ring)."""
         with self._lock:
+            note_access("ShmemSegment.slots", id(self))
             self.buf[idx] = state
 
     def announce(self, idx: int) -> None:
@@ -205,10 +208,12 @@ class ShmemSegment:
         put+queue-completion notification; also used by two-sided
         exchanges)."""
         with self._rxq_lock:
+            note_access("ShmemSegment.rxq", id(self))
             self._rxq.append(idx)
 
     def pop_announced(self) -> Optional[int]:
         with self._rxq_lock:
+            note_access("ShmemSegment.rxq", id(self))
             return self._rxq.popleft() if self._rxq else None
 
     def claim_signals(self, max_n: int) -> List[int]:
@@ -217,6 +222,7 @@ class ShmemSegment:
         signalled slots."""
         out: List[int] = []
         with self._lock:
+            note_access("ShmemSegment.slots", id(self))
             for idx in range(self.nslots):
                 if self.buf[idx] == _ST_SIG:
                     self.buf[idx] = _ST_WRITTEN  # claimed, pending read
@@ -236,6 +242,7 @@ class ShmemSegment:
     def free(self, idx: int) -> None:
         """Return a consumed slot to the receiver-owned pool."""
         with self._lock:
+            note_access("ShmemSegment.slots", id(self))
             self.buf[idx] = _ST_FREE
             self._free.append(idx)
 
@@ -313,7 +320,7 @@ class ShmemGroup:
         self.nslots = self.limits.recv_slots or DEFAULT_SLOTS
         self.slot_size = self.limits.bounce_buffer_size
         self.stats = FabricStats()
-        self._stats_lock = threading.Lock()
+        self._stats_lock = make_lock("ShmemGroup._stats_lock")
         self.segments: Dict[Tuple[int, int], ShmemSegment] = {}
         self._endpoints: Dict[Tuple[int, int], ShmemComm] = {}
         for r in range(n_ranks):
@@ -424,12 +431,12 @@ class ShmemComm:
         #: registered by the client (parcelport / channel) — the capability
         #: is advertised only once a target exists, like the LCI device.
         self.put_target_comp: Any = None
-        self._send_lock = threading.Lock()
+        self._send_lock = make_lock("ShmemComm._send_lock")
         self._outbox: deque = deque()  # two-sided transit ring
         self._inflight = 0  # occupied ring slots (sends AND puts)
         self._bounce_free = group.limits.bounce_buffers
         self._put_done: deque = deque()  # (comp, ctx) pending local put completions
-        self._match_lock = threading.Lock()
+        self._match_lock = make_lock("ShmemComm._match_lock")
         self._posted: Dict[Tuple[int, int], deque] = {}  # (src, tag)
         self._posted_any: Dict[int, deque] = {}  # tag (any-source)
         self._unexpected: Dict[Tuple[int, int], deque] = {}
@@ -473,6 +480,7 @@ class ShmemComm:
         lim = self.group.limits
         size = len(data) + FRAME_OVERHEAD
         with self._send_lock:
+            note_access("ShmemComm.send_ring", id(self))
             if lim.send_queue_depth and self._inflight >= lim.send_queue_depth:
                 with self.group._stats_lock:
                     self.group.stats.backpressure_events += 1
@@ -536,6 +544,7 @@ class ShmemComm:
         self._check_fits(data)
         lim = self.group.limits
         with self._send_lock:
+            note_access("ShmemComm.send_ring", id(self))
             if lim.send_queue_depth and self._inflight >= lim.send_queue_depth:
                 with self.group._stats_lock:
                     self.group.stats.backpressure_events += 1
@@ -578,6 +587,7 @@ class ShmemComm:
         # 1. local injection completions for puts already stored remotely
         for _ in range(max_completions):
             with self._send_lock:
+                note_access("ShmemComm.send_ring", id(self))
                 if not self._put_done:
                     break
                 comp, ctx = self._put_done.popleft()
@@ -587,6 +597,7 @@ class ShmemComm:
         # 2. exchange two-sided transits (flow-controlled by remote slots)
         for _ in range(max_completions):
             with self._send_lock:
+                note_access("ShmemComm.send_ring", id(self))
                 if not self._outbox:
                     break
                 t = self._outbox[0]
@@ -643,6 +654,7 @@ class ShmemComm:
         """Anything still moving through this endpoint: unexchanged
         transits, undelivered put completions, or unconsumed slots."""
         with self._send_lock:
+            note_access("ShmemComm.send_ring", id(self))
             if self._outbox or self._put_done:
                 return True
         return self.segment.pending()

@@ -36,6 +36,8 @@ import threading
 from collections import deque
 from typing import Any, List, Optional, Tuple
 
+from ..analysis.sanitizer import note_exercise
+
 __all__ = [
     "CompletionQueue",
     "LCRQueue",
@@ -132,6 +134,9 @@ class LCRQueue(CompletionQueue):
     def push(self, item: Any) -> None:
         if item is None:
             raise ValueError("None is reserved for 'queue empty'")
+        # deliberately lock-free: the sanitizer counts traffic here but
+        # does not lockset-check it (correctness is the FAA protocol)
+        note_exercise("LCRQueue", id(self))
         while True:
             seg = self._tail_seg
             t = next(seg.tail)
@@ -148,6 +153,7 @@ class LCRQueue(CompletionQueue):
                     self._tail_seg = new_seg
 
     def pop(self) -> Optional[Any]:
+        note_exercise("LCRQueue", id(self))
         burns = 0
         while True:
             seg = self._head_seg

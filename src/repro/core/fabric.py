@@ -40,6 +40,7 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
+from ..analysis.sanitizer import make_lock, note_access
 from .comm.interface import PostStatus
 from .comm.resources import ResourceLimits
 
@@ -101,18 +102,20 @@ class RegisteredBufferPool:
         self.buf_size = buf_size
         self.capacity = nbufs
         self._free: deque = deque(bytearray(buf_size) for _ in range(nbufs))
-        self._lock = threading.Lock()
+        self._lock = make_lock("RegisteredBufferPool._lock")
 
     def acquire(self, size: int) -> Optional[bytearray]:
         if size > self.buf_size:
             return None
         with self._lock:
+            note_access("RegisteredBufferPool._free", id(self))
             if not self._free:
                 return None
             return self._free.popleft()
 
     def release(self, buf: bytearray) -> None:
         with self._lock:
+            note_access("RegisteredBufferPool._free", id(self))
             self._free.append(buf)
 
     def free_count(self) -> int:
@@ -144,9 +147,9 @@ class NetDevice:
         self.bounce_pool = bounce_pool
         self.bounded = send_queue_depth > 0 or bounce_pool is not None
         # Each resource has a distinct lock (hardware-level concurrency).
-        self._recv_lock = threading.Lock()
-        self._cq_lock = threading.Lock()
-        self._send_lock = threading.Lock()
+        self._recv_lock = make_lock("NetDevice._recv_lock")
+        self._cq_lock = make_lock("NetDevice._cq_lock")
+        self._send_lock = make_lock("NetDevice._send_lock")
         self._posted_recvs: deque = deque()  # ctx cookies, SRQ-style
         self._cq: deque = deque()  # hardware completion queue
         self._pending_sends: deque = deque()  # RNR'd sends awaiting retry
@@ -158,6 +161,7 @@ class NetDevice:
     def post_recv(self, ctx: Any = None) -> None:
         """Pre-post one receive slot (location-agnostic, SRQ semantics)."""
         with self._recv_lock:
+            note_access("NetDevice._posted_recvs", id(self))
             self._posted_recvs.append(ctx)
 
     def posted_recv_count(self) -> int:
@@ -173,6 +177,7 @@ class NetDevice:
         Returns (status, bounce_buffer); a refusal names the exhausted
         resource (queue vs buffer pool — different remedies)."""
         with self._send_lock:
+            note_access("NetDevice.send_ring", id(self))
             if self.send_queue_depth and self._inflight_sends >= self.send_queue_depth:
                 self.fabric.stats.backpressure_events += 1
                 return PostStatus.EAGAIN_QUEUE, None
@@ -202,6 +207,7 @@ class NetDevice:
         desc = _SendDesc(dst_rank, dst_dev, data, ctx, eager=eager, bounce=bounce)
         if not self._try_deliver(desc):
             with self._send_lock:
+                note_access("NetDevice.send_ring", id(self))
                 self._pending_sends.append(desc)
         return PostStatus.OK
 
@@ -217,10 +223,12 @@ class NetDevice:
             bounce[: len(data)] = data
         target = self.fabric.device(dst_rank, dst_dev)
         with target._cq_lock:
+            note_access("NetDevice._cq", id(target))
             target._cq.append(
                 Completion(kind="put", src_rank=self.rank, src_dev=self.dev_index, data=data, imm=imm)
             )
         with self._cq_lock:
+            note_access("NetDevice._cq", id(self))
             self._cq.append(Completion(kind="send", ctx=ctx, bounce=bounce))
         st = self.fabric.stats
         st.messages += 1
@@ -235,11 +243,13 @@ class NetDevice:
     def _try_deliver(self, desc: _SendDesc) -> bool:
         target = self.fabric.device(desc.dst_rank, desc.dst_dev)
         with target._recv_lock:
+            note_access("NetDevice._posted_recvs", id(target))
             if not target._posted_recvs:
                 self.fabric.stats.rnr_events += 1
                 return False
             recv_ctx = target._posted_recvs.popleft()
         with target._cq_lock:
+            note_access("NetDevice._cq", id(target))
             target._cq.append(
                 Completion(
                     kind="recv",
@@ -250,6 +260,7 @@ class NetDevice:
                 )
             )
         with self._cq_lock:
+            note_access("NetDevice._cq", id(self))
             self._cq.append(Completion(kind="send", ctx=desc.ctx, bounce=desc.bounce))
         st = self.fabric.stats
         st.messages += 1
@@ -269,6 +280,7 @@ class NetDevice:
         recycles its bounce buffer."""
         out: List[Completion] = []
         with self._cq_lock:
+            note_access("NetDevice._cq", id(self))
             for _ in range(max_n):
                 if not self._cq:
                     break
@@ -282,6 +294,7 @@ class NetDevice:
                     c.bounce = None
         if freed:
             with self._send_lock:
+                note_access("NetDevice.send_ring", id(self))
                 self._inflight_sends -= freed
         return out
 
@@ -289,6 +302,7 @@ class NetDevice:
         """Retry RNR'd sends.  Returns True if anything moved."""
         moved = False
         with self._send_lock:
+            note_access("NetDevice.send_ring", id(self))
             pending = list(self._pending_sends)
             self._pending_sends.clear()
         for desc in pending:
@@ -296,6 +310,7 @@ class NetDevice:
                 moved = True
             else:
                 with self._send_lock:
+                    note_access("NetDevice.send_ring", id(self))
                     self._pending_sends.append(desc)
         return moved
 

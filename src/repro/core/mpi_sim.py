@@ -128,7 +128,12 @@ class MPISim:
     # -- the classic MPI veneer over the interface --------------------------
     def isend(self, dest: int, tag: int, data: bytes) -> MPIRequest:
         req = MPIRequest("send")
-        self.post_send(dest, 0, tag, data, req.sync)
+        status = self.post_send(dest, 0, tag, data, req.sync)
+        if not status:  # post_send's contract is Always-OK (queues internally)
+            raise RuntimeError(
+                f"MPISim.post_send returned {status!r} — the MPI veneer has no "
+                "retry path; a refused post here would drop the send silently"
+            )
         return req
 
     def irecv(self, source: int, tag: int) -> MPIRequest:

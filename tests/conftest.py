@@ -13,3 +13,24 @@ sys.path.insert(0, os.path.dirname(__file__))
 import jax
 
 jax.config.update("jax_enable_x64", False)
+
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _repro_sanitize_session():
+    """Under ``REPRO_SANITIZE=1`` (the CI sanitizer leg), assert at session
+    end that the lockset checker saw real traffic and found no races in
+    the shipped code.  Tests that *seed* violations on purpose snapshot
+    and restore the sanitizer state themselves (see test_analysis.py)."""
+    yield
+    from repro.analysis import sanitizer
+
+    if not sanitizer.enabled():
+        return
+    report = sanitizer.session_report()
+    assert report["exercised"], (
+        "REPRO_SANITIZE=1 but no instrumented structure was exercised — "
+        "the sanitizer leg did not drive the comm layer"
+    )
+    assert not report["races"], report["races"]

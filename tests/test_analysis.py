@@ -1,0 +1,612 @@
+"""The concurrency static-analysis subsystem (ISSUE 10).
+
+Per-pass fixture modules: each known-bad fixture is caught with a
+witness, each clean twin stays quiet; the ported gates catch the aliased
+imports and multi-line calls the old line-greps provably missed; the
+whole repo runs clean against the reviewed baseline; and the runtime
+lockset sanitizer reports seeded races while blessing the shipped lock
+discipline.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import threading
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+from repro.analysis.registry import (
+    AnalysisContext,
+    all_passes,
+    load_baseline,
+    run_passes,
+    split_findings,
+)
+from repro.analysis import sanitizer
+
+
+def ctx_of(**sources):
+    """Fixture context: keyword name → source (dots in names via __)."""
+    return AnalysisContext.from_sources(
+        {k.replace("__", "/") + ".py": textwrap.dedent(v) for k, v in sources.items()}
+    )
+
+
+def findings_of(ctx, pass_id):
+    return run_passes(ctx, [pass_id])
+
+
+# ===================================================== pass 1: lock order
+CYCLE_SRC = """
+    import threading
+
+    class Pair:
+        def __init__(self):
+            self.l1 = threading.Lock()
+            self.l2 = threading.Lock()
+
+        def forward(self):
+            with self.l1:
+                with self.l2:
+                    pass
+
+        def backward(self):
+            with self.l2:
+                with self.l1:
+                    pass
+"""
+
+CLEAN_ORDER_SRC = """
+    import threading
+
+    class Pair:
+        def __init__(self):
+            self.l1 = threading.Lock()
+            self.l2 = threading.Lock()
+
+        def forward(self):
+            with self.l1:
+                with self.l2:
+                    pass
+
+        def also_forward(self):
+            with self.l1:
+                with self.l2:
+                    pass
+"""
+
+
+def test_lock_order_cycle_caught_with_witness():
+    found = findings_of(ctx_of(fx__cycle=CYCLE_SRC), "lock-order")
+    cycles = [f for f in found if f.key.startswith("cycle:")]
+    assert len(cycles) == 1, found
+    f = cycles[0]
+    assert "Pair.l1" in f.message and "Pair.l2" in f.message
+    # full witness path: one edge per hop, each naming the acquiring function
+    assert len(f.witness) == 2
+    assert any("forward" in w for w in f.witness)
+    assert any("backward" in w for w in f.witness)
+
+
+def test_lock_order_clean_twin_quiet():
+    assert findings_of(ctx_of(fx__clean=CLEAN_ORDER_SRC), "lock-order") == []
+
+
+def test_lock_order_transitive_cycle_caught():
+    """Reordering nested acquisitions ACROSS functions (caller holds A,
+    callee takes B; elsewhere the nesting is B→A) still cycles."""
+    src = """
+        import threading
+
+        class Pair:
+            def __init__(self):
+                self.l1 = threading.Lock()
+                self.l2 = threading.Lock()
+
+            def take_l2(self):
+                with self.l2:
+                    pass
+
+            def forward(self):
+                with self.l1:
+                    self.take_l2()
+
+            def backward(self):
+                with self.l2:
+                    with self.l1:
+                        pass
+    """
+    found = findings_of(ctx_of(fx__trans=src), "lock-order")
+    cycles = [f for f in found if f.key.startswith("cycle:")]
+    assert len(cycles) == 1, found
+    assert any("take_l2" in w for w in cycles[0].witness)
+
+
+def test_lock_order_try_acquire_then_return_is_not_a_self_cycle():
+    """The LCIDevice._acquire idiom: a try-acquire branch that RETURNS
+    must not leak its held-set into the unconditional acquire below."""
+    src = """
+        import threading
+
+        class Dev:
+            def __init__(self):
+                self.coarse = threading.Lock()
+
+            def _acquire(self, try_only=False):
+                if try_only:
+                    ok = self.coarse.acquire(blocking=False)
+                    return ok
+                self.coarse.acquire()
+                return True
+    """
+    assert findings_of(ctx_of(fx__tryacq=src), "lock-order") == []
+
+
+# ============================================ pass 2: blocking under lock
+BLOCKING_SRC = """
+    import threading
+    import time
+
+    class Engine:
+        def __init__(self):
+            self.lk = threading.Lock()
+
+        def step(self):
+            with self.lk:
+                time.sleep(0.01)
+"""
+
+BLOCKING_TRANSITIVE_SRC = """
+    import threading
+    import time
+
+    class Engine:
+        def __init__(self):
+            self.lk = threading.Lock()
+
+        def _drive(self):
+            time.sleep(0.01)
+
+        def step(self):
+            with self.lk:
+                self._drive()
+"""
+
+BLOCKING_CLEAN_SRC = """
+    import threading
+    import time
+
+    class Engine:
+        def __init__(self):
+            self.lk = threading.Lock()
+
+        def step(self):
+            with self.lk:
+                n = 1
+            time.sleep(0.01)
+
+        def joiner(self, t):
+            with self.lk:
+                t.join(timeout=0.5)
+"""
+
+
+def test_blocking_under_lock_caught():
+    found = findings_of(ctx_of(fx__blk=BLOCKING_SRC), "blocking-under-lock")
+    assert len(found) == 1 and "sleep" in found[0].message
+    assert "Engine.lk" in found[0].message
+
+
+def test_blocking_under_lock_transitive_with_chain():
+    found = findings_of(ctx_of(fx__blkt=BLOCKING_TRANSITIVE_SRC), "blocking-under-lock")
+    assert len(found) == 1, found
+    # witness chain walks through the callee to the sleep site
+    assert any("_drive" in w for w in found[0].witness)
+
+
+def test_blocking_under_lock_clean_twin_quiet():
+    """Blocking outside the lock and timeout-bounded joins are fine."""
+    assert findings_of(ctx_of(fx__blkc=BLOCKING_CLEAN_SRC), "blocking-under-lock") == []
+
+
+# ============================================ pass 3: unchecked PostStatus
+POST_SRC = """
+    def fire_and_forget(dev, data):
+        dev.post_send(1, 0, 7, data, None)
+
+    def checked(dev, data):
+        st = dev.post_send(1, 0, 7, data, None)
+        return st
+
+    def parked(dev, throttle, data):
+        throttle(lambda: dev.post_put_signal(1, 0, data, None))
+"""
+
+
+def test_unchecked_post_status_caught_and_consumers_quiet():
+    found = findings_of(ctx_of(fx__post=POST_SRC), "unchecked-post-status")
+    assert len(found) == 1, found
+    assert "fire_and_forget" in found[0].message and "post_send" in found[0].message
+
+
+# ============================================ pass 4: capability dominance
+CAP_SRC = """
+    class Proto:
+        def __init__(self, dev):
+            self._use_put = dev.capabilities.one_sided_put
+
+        def good(self, dev, data):
+            if self._use_put:
+                return dev.post_put_signal(0, 0, data, None)
+            return dev.post_send(0, 0, 1, data, None)
+
+        def good_negated(self, dev, data):
+            if not self._use_put:
+                return dev.post_send(0, 0, 1, data, None)
+            else:
+                return dev.post_put_signal(0, 0, data, None)
+
+        def bad(self, dev, data):
+            return dev.post_put_signal(0, 0, data, None)
+"""
+
+
+def test_capability_dominance_undominated_put_caught():
+    found = findings_of(ctx_of(fx__cap=CAP_SRC), "capability-dominance")
+    assert len(found) == 1, found
+    assert "bad" in found[0].key
+
+
+def test_capability_dominance_wrong_branch_caught():
+    """A put on the NEGATIVE side of the capability check is a bug, not
+    a dominated site — polarity matters, mere textual proximity (the old
+    gate's 'one_sided_put appears somewhere in the file') does not."""
+    src = """
+        class Proto:
+            def __init__(self, dev):
+                self._use_put = dev.capabilities.one_sided_put
+
+            def inverted(self, dev, data):
+                if not self._use_put:
+                    return dev.post_put_signal(0, 0, data, None)
+                return dev.post_send(0, 0, 1, data, None)
+    """
+    found = findings_of(ctx_of(fx__capn=src), "capability-dominance")
+    assert len(found) == 1, found
+
+
+# ============================================== pass 5: thread ownership
+def test_thread_ownership_rogue_spawn_caught_and_nursery_quiet():
+    src = """
+        import threading
+
+        def rogue(fn):
+            t = threading.Thread(target=fn)
+            t.start()
+
+        def good(membership, fn):
+            return membership.spawn_worker(fn)
+    """
+    found = findings_of(ctx_of(fx__rogue=src), "thread-ownership")
+    assert len(found) == 1 and "threading.Thread" in found[0].message
+
+
+def test_thread_ownership_catches_aliased_thread_old_gate_missed():
+    """`from threading import Thread as T; T(target=...)` — neither of
+    the old gate's needles ('threading.Thread(' / 'Thread(target=')
+    appears in the source, but the call-graph resolution catches it."""
+    src = """
+        from threading import Thread as T
+
+        def rogue(fn):
+            worker = T(target=fn)
+            worker.start()
+    """
+    plain = textwrap.dedent(src)
+    assert "threading.Thread(" not in plain and "Thread(target=" not in plain  # old gate blind
+    found = findings_of(ctx_of(fx__alias=src), "thread-ownership")
+    assert len(found) == 1, found
+
+
+# ===================================== ported gates: old-grep blind spots
+def test_put_capability_gate_catches_aliased_isinstance():
+    src = """
+        from repro.core.device import LCIDevice as Dev
+
+        def pick(dev):
+            if isinstance(dev, Dev):
+                return "put"
+            return "send"
+    """
+    plain = textwrap.dedent(src)
+    # the old line-grep required a backend name ON the isinstance line
+    assert not any(
+        "isinstance(" in ln and "LCIDevice" in ln for ln in plain.splitlines()
+    )
+    found = findings_of(ctx_of(fx__isal=src), "gate-put-capability")
+    assert len(found) == 1 and "LCIDevice" in found[0].message
+
+
+def test_put_capability_gate_catches_multiline_isinstance():
+    src = (
+        "def pick(dev):\n"
+        "    if isinstance(\n"
+        "        dev,\n"
+        "        MPISim,\n"
+        "    ):\n"
+        "        return 'big-lock'\n"
+        "    return 'other'\n"
+    )
+    assert not any(
+        "isinstance(" in ln and "MPISim" in ln for ln in src.splitlines()
+    )  # old per-line grep was blind to the wrapped call
+    found = findings_of(
+        AnalysisContext.from_sources({"fx/isml.py": src}), "gate-put-capability"
+    )
+    assert len(found) == 1 and "MPISim" in found[0].message
+
+
+def test_serving_gate_catches_aliased_queue_ctor():
+    src = """
+        from repro.core.completion import LCRQueue as Q
+
+        def build():
+            return Q()
+    """
+    plain = textwrap.dedent(src)
+    assert "LCRQueue(" not in plain  # the old forbidden-substring grep missed this
+    found = findings_of(
+        AnalysisContext.from_sources(
+            {"src/repro/serve/fx_handoff.py": textwrap.dedent(src)}
+        ),
+        "gate-serving-comm",
+    )
+    assert any(f.key == "queue-ctor:LCRQueue" for f in found), found
+
+
+def test_serving_gate_clean_twin_quiet():
+    src = """
+        def build(channel):
+            return channel.request(b"x")
+    """
+    found = findings_of(
+        AnalysisContext.from_sources(
+            {"src/repro/serve/fx_clean.py": textwrap.dedent(src)}
+        ),
+        "gate-serving-comm",
+    )
+    assert found == []
+
+
+# ======================================================== whole-repo runs
+def repo_ctx():
+    return AnalysisContext.for_repo(REPO)
+
+
+def test_whole_repo_zero_nonbaselined_findings():
+    """Every pass over the real tree: nothing outside the reviewed
+    baseline, and no stale baseline entries either."""
+    findings = run_passes(repo_ctx())
+    baseline = load_baseline(REPO / "tools" / "analysis_baseline.json")
+    new, accepted, stale = split_findings(findings, baseline)
+    assert new == [], [f.fingerprint for f in new]
+    assert stale == [], stale
+    # the deliberate paper exhibits are still present (the baseline is live)
+    assert len(accepted) == len(baseline)
+
+
+def test_registry_has_all_thirteen_passes():
+    ids = set(all_passes())
+    assert ids == {
+        "lock-order",
+        "blocking-under-lock",
+        "unchecked-post-status",
+        "capability-dominance",
+        "thread-ownership",
+        "gate-resource-mirror",
+        "gate-resource-shared",
+        "gate-resource-delegates",
+        "gate-progress-engine",
+        "gate-serving-comm",
+        "gate-put-capability",
+        "gate-thread-nursery",
+        "gate-no-pickle-wire",
+    }
+
+
+def test_fingerprints_are_line_number_free():
+    """Moving a function must not invalidate its baseline entry."""
+    shifted = "\n\n\n# pushed down\n" + textwrap.dedent(BLOCKING_SRC)
+    a = findings_of(ctx_of(fx__blk=BLOCKING_SRC), "blocking-under-lock")
+    b = findings_of(
+        AnalysisContext.from_sources({"fx/blk.py": shifted}), "blocking-under-lock"
+    )
+    assert a[0].line != b[0].line
+    assert a[0].fingerprint == b[0].fingerprint
+
+
+def test_analyze_cli_strict_green_and_json():
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "analyze.py"), "--strict",
+         "--json", "/tmp/analysis_findings.json"],
+        capture_output=True, text=True,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    data = json.loads(Path("/tmp/analysis_findings.json").read_text())
+    assert data["new"] == []
+    assert len(data["baselined"]) >= 8
+
+
+def test_analyze_cli_unknown_pass_errors():
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "analyze.py"), "-p", "no-such-pass"],
+        capture_output=True, text=True,
+    )
+    assert out.returncode == 2 and "no-such-pass" in out.stderr
+
+
+def test_check_api_shim_contract():
+    """The CLI shim keeps the historical output format and exit code."""
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_api.py")],
+        capture_output=True, text=True,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert out.stdout.strip().splitlines()[-1] == "check_api: 0 failure(s)"
+
+
+# ================================================= true-positive regressions
+def test_mpisim_isend_observes_post_status():
+    """ISSUE 10 triage: isend discarded post_send's PostStatus.  The
+    contract is Always-OK; a falsy status now raises instead of silently
+    dropping the send."""
+    from repro.core.fabric import Fabric
+    from repro.core.mpi_sim import MPISim
+    from repro.core.comm.interface import PostStatus
+
+    sim = MPISim(Fabric(2), 0)
+    req = sim.isend(1, 5, b"ok")  # normal path still returns the request
+    assert req.kind == "send"
+    sim.post_send = lambda *a, **k: PostStatus.EAGAIN_QUEUE  # type: ignore[assignment]
+    with pytest.raises(RuntimeError, match="EAGAIN_QUEUE"):
+        sim.isend(1, 6, b"drop?")
+
+
+def test_membership_queries_hold_the_lock():
+    """ISSUE 10 triage: state/guard_post/admit_completion read (and
+    admit_completion mutates) the member table without Membership._lock.
+    Under the sanitizer, hammering them against concurrent transitions
+    must produce an empty race report."""
+    from repro.core.comm.membership import Membership
+
+    was = sanitizer.enabled()
+    sanitizer.enable(True)
+    sanitizer.reset()
+    try:
+        m = Membership()  # constructed under sanitize → tracked lock
+        stop = threading.Event()
+
+        def transitions():
+            rank = 0
+            while not stop.is_set():
+                m.join(rank)
+                m.activate(rank)
+                m.begin_drain(rank)
+                m.finish_leave(rank)
+                rank += 1
+
+        def queries():
+            while not stop.is_set():
+                m.state(0)
+                m.guard_post(0)
+                m.admit_completion(0, 0)
+                m.view()
+
+        ts = [threading.Thread(target=transitions), threading.Thread(target=queries)]
+        for t in ts:
+            t.start()
+        import time
+
+        time.sleep(0.3)
+        stop.set()
+        for t in ts:
+            t.join()
+        assert sanitizer.race_reports() == [], sanitizer.race_reports()
+        assert sanitizer.exercised_structures().get("Membership._members", 0) > 0
+    finally:
+        sanitizer.reset()
+        sanitizer.enable(was)
+
+
+# ======================================================== lockset sanitizer
+def test_sanitizer_reports_seeded_race():
+    """Deleting a ``with lock`` is exactly what the lockset checker
+    exists to catch: two threads touching one structure with no common
+    lock → one actionable report naming the structure."""
+    was = sanitizer.enabled()
+    sanitizer.enable(True)
+    sanitizer.reset()
+    try:
+        lk = sanitizer.make_lock("Mutant._lock")
+
+        def locked():
+            for _ in range(20):
+                with lk:
+                    sanitizer.note_access("Mutant.slots", 1)
+
+        def unlocked():  # the deleted `with lock`
+            for _ in range(20):
+                sanitizer.note_access("Mutant.slots", 1)
+
+        t1, t2 = threading.Thread(target=locked), threading.Thread(target=unlocked)
+        t1.start(); t1.join()
+        t2.start(); t2.join()
+        reports = sanitizer.race_reports()
+        assert len(reports) == 1, reports
+        assert reports[0]["struct"] == "Mutant.slots"
+        assert len(reports[0]["threads"]) == 2
+    finally:
+        sanitizer.reset()
+        sanitizer.enable(was)
+
+
+def test_sanitizer_blesses_shmem_segment_discipline():
+    """The shipped ShmemSegment lock discipline survives two-threaded
+    alloc/commit/announce/pop/read/free traffic with zero reports, and
+    the shared structures show up as exercised."""
+    was = sanitizer.enabled()
+    sanitizer.enable(True)
+    sanitizer.reset()
+    try:
+        from repro.core.comm.shmem import ShmemSegment
+
+        seg = ShmemSegment(nslots=8, slot_size=64)
+        try:
+            def producer():
+                for i in range(200):
+                    idx = seg.alloc()
+                    if idx is None:
+                        continue
+                    seg.write(idx, 1, 0, 0, i, b"x" * 8)
+                    seg.commit(idx, 1)
+                    seg.announce(idx)
+
+            def consumer():
+                for _ in range(400):
+                    idx = seg.pop_announced()
+                    if idx is not None:
+                        seg.read(idx)
+                        seg.free(idx)
+
+            ts = [threading.Thread(target=producer), threading.Thread(target=consumer)]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            assert sanitizer.race_reports() == [], sanitizer.race_reports()
+            ex = sanitizer.exercised_structures()
+            assert ex.get("ShmemSegment.slots", 0) > 0
+            assert ex.get("ShmemSegment.rxq", 0) > 0
+        finally:
+            seg.close()
+    finally:
+        sanitizer.reset()
+        sanitizer.enable(was)
+
+
+def test_sanitizer_disabled_is_inert():
+    assert not sanitizer.enabled() or True  # state restored by other tests
+    was = sanitizer.enabled()
+    sanitizer.enable(False)
+    try:
+        lk = sanitizer.make_lock("X")
+        assert isinstance(lk, type(threading.Lock()))
+        sanitizer.note_access("X.y", 0)
+        assert sanitizer.race_reports() == []
+    finally:
+        sanitizer.enable(was)

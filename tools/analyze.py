@@ -1,0 +1,19 @@
+#!/usr/bin/env python3
+"""Run the repro.analysis concurrency passes (thin launcher).
+
+Usage mirrors the installed ``repro-analyze`` console script:
+
+    python tools/analyze.py                 # all passes, baseline-aware
+    python tools/analyze.py --list
+    python tools/analyze.py -p lock-order -p blocking-under-lock
+    python tools/analyze.py --strict --json analysis_findings.json
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,363 +1,102 @@
 #!/usr/bin/env python3
-"""API-drift gate (the CI docs job, also run as a tier-1 test).
+"""API-drift gate — thin CLI shim over ``repro.analysis`` (ISSUE 10).
 
-The redesign's core guarantee is ONE shared resource model:
-``repro.core.comm.resources.ResourceLimits`` is the single source of
-resource knobs, consumed by the functional fabric, the parcelports, and
-the DES ``SimConfig``.  Before it, ``SimConfig`` hand-mirrored the fabric
-knobs field by field — a drift machine.  This gate fails if the mirror
-ever re-grows:
+The eight gates this script historically implemented inline now live as
+registered passes in ``src/repro/analysis/gates.py``, sharing the one
+cached AST walk, import-alias map, and call graph with the concurrency
+passes (lock order, blocking-under-lock, PostStatus, capability
+dominance, thread ownership — run those via ``tools/analyze.py``).  The
+AST ports also fix the old line-greps' blind spots: aliased imports
+(``from ..completion import LCRQueue as Q``) and calls wrapped across
+lines now resolve.
 
-1. **No mirrored fields** — no dataclass *field* of ``SimConfig`` or
-   ``LCIPPConfig`` may share a name with a ``ResourceLimits`` field
-   (read-only delegating properties are fine; duplicated storage is not).
-2. **Shared object, not copies** — both configs carry a ``limits`` field
-   typed ``ResourceLimits``, ``Fabric`` exposes the one it was built
-   with, and ``sim_config_for_variant`` hands the DES the *same* limits
-   the functional variant resolves to (checked on ``lci_b8``, a
-   parameterized family member resolved on demand).
-3. **Delegates stay wired** — the legacy ``SimConfig.send_queue_depth``
-   etc. read through to ``limits``.
+This shim preserves the historical contract exactly — the same six
+module-level functions appending human-readable strings to a
+``failures`` list, the same ``FAIL: ...`` lines and ``check_api: N
+failure(s)`` summary, the same nonzero exit on failure — so CI and the
+tier-1 gate tests keep loading it unchanged:
 
-Since PR 4 the gate also protects the second shared component: **ONE
-progress engine** (``repro.core.comm.progress.ProgressEngine``).  Before
-it, the completion-reap loop existed three times (LCI parcelport, MPI
-parcelport, ~270 duplicated DES lines) — exactly the drift this gate now
-fails on if it re-grows:
-
-4. **No private reap loops** — ``poll_cq`` (the raw hardware reap verb)
-   may appear only in the fabric (its definition) and the LCI device (the
-   ``CommInterface`` progress verb); both functional parcelports'
-   ``background_work`` must be thin ``run_step`` calls into the engine;
-   the DES must not re-grow backend-specific background-work generators
-   (``_lci_background_work`` / ``_mpi_background_work`` /
-   ``_progress_device``), and ``_handle_completion`` may be called only
-   from the engine's op driver.
-
-Since ISSUE 5 the gate also protects the serving stack's hand-off:
-
-5. **Serving rides the comm layer** — ``serve/server.py`` must hand
-   requests/responses through the shared abstraction (``CommChannel`` +
-   the one ``ProgressEngine`` via ``ProgressPolicy.for_config`` and
-   ``run_step``), and neither ``serve/``, ``launch/serve.py``, nor
-   ``core/executor.py`` may re-grow private send/recv hand-off machinery
-   (raw completion-queue construction, the MPI ``isend``/``irecv``
-   veneer, or hand-rolled ``_send_loop``/``_recv_loop`` pumps).
-
-Since ISSUE 6 the gate also protects the capability ladder's selection
-surface:
-
-6. **Put-path selection is capability-driven only** — outside the comm
-   backends themselves (``core/comm/``, ``core/device.py``,
-   ``core/mpi_sim.py``), no code line may branch on a backend's concrete
-   type (``isinstance`` against ``LCIDevice`` / ``ShmemComm`` /
-   ``CollectiveComm`` / ``MPISim``), and any file that posts a one-sided
-   put (``.post_put_signal(``) must consult ``one_sided_put`` from the
-   advertised ``Capabilities`` — the paper's point (§2.3) is that the
-   protocol engine selects paths from what the transport *advertises*,
-   never from what it *is*.
-
-Since ISSUE 8 the gate also protects worker-lifecycle ownership:
-
-7. **One thread nursery** — worker threads (progress workers, fleet
-   workers, the executor's task workers) are spawned and joined ONLY
-   through ``core/comm/membership.py`` (``spawn_worker`` /
-   ``join_workers`` / ``ProgressWorkerPool``); no module in ``serve/``,
-   ``amtsim/``, the executor, or the parcelports may call
-   ``threading.Thread(`` directly — otherwise the membership census
-   (``live_worker_count``, the abandoned-member sweep) silently
-   undercounts.  Benchmark *client* load generators (``launch/serve.py``)
-   are not workers and are exempt.
-
-Since ISSUE 9 the gate also protects the wire format:
-
-8. **No pickle on the wire** — everything that crosses the comm layer is
-   the versioned binary format from ``core/comm/wire.py`` (grad header +
-   typed message codec); ``train/grad_sync.py``, ``core/comm/``, and
-   ``serve/`` may not import or call ``pickle`` (AST-checked, so
-   docstrings that merely *mention* pickle don't trip it).  Pickle's
-   self-describing stream is both slower and version-fragile, and a
-   pickling hop would silently break the fused kernel's bit-parity
-   contract with the host pack path.
+1–3. **One shared resource model** — no mirrored config fields, every
+     layer consumes the one ``ResourceLimits`` object, legacy knobs
+     delegate through (``check_api``).
+4.   **One progress engine** — no private reap loops (``check_progress_engine``).
+5.   **Serving rides the comm layer** (``check_serving_comm``).
+6.   **Put-path selection is capability-driven only** (``check_put_capability``).
+7.   **One thread nursery** (``check_membership_thread_ownership``).
+8.   **No pickle on the wire** (``check_no_pickle_wire``).
 
 Exit code is nonzero on any failure; failures are listed one per line.
 """
 from __future__ import annotations
 
-import ast
-import dataclasses
 import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+_CTX = None
+_CTX_ERR = None
+
+
+def _context():
+    """One shared AnalysisContext for all gates (one AST walk per module)."""
+    global _CTX, _CTX_ERR
+    if _CTX is None and _CTX_ERR is None:
+        try:
+            from repro.analysis.registry import AnalysisContext
+
+            _CTX = AnalysisContext.for_repo(REPO)
+        except Exception as exc:  # pragma: no cover - environment-dependent
+            _CTX_ERR = f"import failed: {exc}"
+    return _CTX, _CTX_ERR
+
+
+def _run(failures: list, *pass_ids: str) -> None:
+    ctx, err = _context()
+    if err is not None:
+        failures.append(err)
+        return
+    from repro.analysis.registry import run_passes
+
+    for f in run_passes(ctx, list(pass_ids)):
+        failures.append(f.message)
 
 
 def check_api(failures: list) -> None:
-    sys.path.insert(0, str(REPO / "src"))
-    try:
-        from repro.amtsim.parcelport_sim import SimConfig, sim_config_for_variant
-        from repro.core.comm.resources import ResourceLimits
-        from repro.core.fabric import Fabric
-        from repro.core.lci_parcelport import LCIPPConfig
-        from repro.core.variants import VARIANTS
-    except Exception as exc:  # pragma: no cover - environment-dependent
-        failures.append(f"import failed: {exc}")
-        return
-
-    limit_fields = {f.name for f in dataclasses.fields(ResourceLimits)}
-
-    # 1. no config may re-grow a field duplicating the shared model
-    for cfg_cls in (SimConfig, LCIPPConfig):
-        dup = limit_fields & {f.name for f in dataclasses.fields(cfg_cls)}
-        if dup:
-            failures.append(
-                f"{cfg_cls.__name__} duplicates ResourceLimits fields {sorted(dup)} "
-                "(use the shared `limits` object, not mirrored fields)"
-            )
-
-    # 2. every layer consumes the one shared object
-    for cfg_cls in (SimConfig, LCIPPConfig):
-        names = {f.name: f for f in dataclasses.fields(cfg_cls)}
-        if "limits" not in names:
-            failures.append(f"{cfg_cls.__name__} has no `limits: ResourceLimits` field")
-        elif not isinstance(cfg_cls().limits, ResourceLimits):
-            failures.append(f"{cfg_cls.__name__}().limits is not a ResourceLimits")
-    lim = ResourceLimits(send_queue_depth=3, bounce_buffers=2, bounce_buffer_size=4096)
-    fab = Fabric(2, limits=lim)
-    if getattr(fab, "limits", None) is not lim:
-        failures.append("Fabric does not expose the ResourceLimits it was built with")
-    if fab.device(0).send_queue_depth != 3:
-        failures.append("Fabric devices ignore limits.send_queue_depth")
-    try:
-        functional = VARIANTS["lci_b8"].limits
-        des = sim_config_for_variant("lci_b8").limits
-        if functional != des:
-            failures.append(
-                f"lci_b8: functional limits {functional} != DES limits {des} "
-                "(the two layers drifted)"
-            )
-    except KeyError:
-        failures.append("parameterized family member lci_b8 failed to resolve")
-
-    # 3. legacy knob names still read through to the shared model
-    probe = SimConfig(limits=ResourceLimits(send_queue_depth=7, bounce_buffers=5,
-                                            bounce_buffer_size=1234, retry_budget=9,
-                                            recv_slots=6))
-    for knob, want in (("send_queue_depth", 7), ("bounce_buffers", 5),
-                       ("bounce_buffer_size", 1234), ("retry_budget", 9),
-                       ("recv_slots", 6)):
-        if getattr(probe, knob, None) != want:
-            failures.append(f"SimConfig.{knob} does not delegate to limits.{knob}")
-    if LCIPPConfig(limits=ResourceLimits(retry_budget=3)).retry_budget != 3:
-        failures.append("LCIPPConfig.retry_budget does not delegate to limits.retry_budget")
+    """Gates 1–3: the ONE shared resource model (runtime dataclass probes)."""
+    _run(failures, "gate-resource-mirror", "gate-resource-shared", "gate-resource-delegates")
 
 
 def check_progress_engine(failures: list) -> None:
     """Gate 4: completions are reaped and dispatched ONLY by the shared
     ProgressEngine and its op adapters (no re-grown private loops)."""
-    src = REPO / "src" / "repro"
-    core = src / "core"
-    # 4a. poll_cq stays behind the CommInterface progress verb (match the
-    # call syntax on code lines, not mentions in comments/docstrings)
-    allowed_poll_cq = {core / "fabric.py", core / "device.py"}
-    for path in sorted(src.rglob("*.py")):
-        if path in allowed_poll_cq:
-            continue
-        if any(
-            ".poll_cq(" in line
-            for line in path.read_text().splitlines()
-            if not line.lstrip().startswith("#")
-        ):
-            failures.append(
-                f"{path.relative_to(REPO)}: calls poll_cq — the hardware reap "
-                "verb belongs to the engine's backend adapters only"
-            )
-    # 4b. both functional parcelports drive the ONE engine
-    sys.path.insert(0, str(REPO / "src"))
-    try:
-        from repro.core.lci_parcelport import LCIParcelport
-        from repro.core.mpi_parcelport import MPIParcelport
-    except Exception as exc:  # pragma: no cover - environment-dependent
-        failures.append(f"import failed: {exc}")
-        return
-    for cls in (LCIParcelport, MPIParcelport):
-        if "run_step" not in cls.background_work.__code__.co_names:
-            failures.append(
-                f"{cls.__name__}.background_work does not call the shared engine "
-                "(run_step) — private progress loop re-grown?"
-            )
-    for fname in ("lci_parcelport.py", "mpi_parcelport.py"):
-        text = (core / fname).read_text()
-        if "ProgressEngine" not in text:
-            failures.append(f"src/repro/core/{fname}: does not import the shared ProgressEngine")
-        if ".drain(" in text:
-            failures.append(
-                f"src/repro/core/{fname}: drains a completion queue directly — "
-                "reaping belongs to the engine's reap op"
-            )
-    # 4c. the DES has no backend-specific background-work generators
-    sim_path = src / "amtsim" / "parcelport_sim.py"
-    sim = sim_path.read_text()
-    if "ProgressEngine" not in sim:
-        failures.append("parcelport_sim.py does not import the shared ProgressEngine")
-    for forbidden in ("_lci_background_work", "_mpi_background_work", "_progress_device"):
-        if forbidden in sim:
-            failures.append(
-                f"parcelport_sim.py re-grew {forbidden} — the DES must drive the "
-                "shared engine, not duplicate its loop"
-            )
-    # def _handle_completion + exactly one call site (the engine driver);
-    # comment lines don't count — the gate polices code, not documentation
-    n_handle = sum(
-        line.count("_handle_completion(")
-        for line in sim.splitlines()
-        if not line.lstrip().startswith("#")
-    )
-    if n_handle > 2:
-        failures.append(
-            f"parcelport_sim.py calls _handle_completion from {n_handle - 1} sites — "
-            "dispatch-by-kind belongs to the engine driver alone"
-        )
+    _run(failures, "gate-progress-engine")
 
 
 def check_serving_comm(failures: list) -> None:
     """Gate 5: the serving stack's request/response hand-off goes through
-    the shared CommInterface, and private hand-off loops may not re-grow
-    in ``serve/``, ``launch/serve.py``, or the executor."""
-    src = REPO / "src" / "repro"
-    server_path = src / "serve" / "server.py"
-    exec_path = src / "core" / "executor.py"
-    server = server_path.read_text()
-    # 5a. the hand-off is built on the shared abstraction
-    for needle, why in (
-        ("CommChannel", "requests/responses must ride the comm layer's channel"),
-        ("ProgressEngine", "the engine loop must be the ONE shared ProgressEngine"),
-        ("ProgressPolicy.for_config", "the policy must come from the shared builder"),
-        ("run_step", "the serve loop must drive the engine's canonical step"),
-    ):
-        if needle not in server:
-            failures.append(f"src/repro/serve/server.py: {needle} missing — {why}")
-    if "run_step" not in exec_path.read_text():
-        failures.append(
-            "src/repro/core/executor.py: the idle pump does not drive the shared "
-            "engine (run_step) — opaque private pump re-grown?"
-        )
-    # 5b. no private hand-off machinery beside it (code lines only)
-    paths = sorted((src / "serve").glob("*.py")) + [exec_path, src / "launch" / "serve.py"]
-    for path in paths:
-        code = "\n".join(
-            line for line in path.read_text().splitlines()
-            if not line.lstrip().startswith("#")
-        )
-        for forbidden, why in (
-            ("LCRQueue(", "completion queues belong behind the comm layer"),
-            ("MichaelScottQueue(", "completion queues belong behind the comm layer"),
-            ("LockQueue(", "completion queues belong behind the comm layer"),
-            (".isend(", "the MPI veneer bypasses the unified interface"),
-            (".irecv(", "the MPI veneer bypasses the unified interface"),
-            ("_send_loop", "private send loop re-grown"),
-            ("_recv_loop", "private recv loop re-grown"),
-        ):
-            if forbidden in code:
-                failures.append(f"{path.relative_to(REPO)}: contains {forbidden} — {why}")
+    the shared CommInterface; no private hand-off loops in ``serve/``,
+    ``launch/serve.py``, or the executor."""
+    _run(failures, "gate-serving-comm")
 
 
 def check_put_capability(failures: list) -> None:
     """Gate 6: one-sided-put path selection rides the advertised
     ``Capabilities`` alone — never the backend's concrete type."""
-    src = REPO / "src" / "repro"
-    comm_dir = src / "core" / "comm"
-    # backends may inspect their own concrete types; everyone else selects
-    # by Capabilities
-    allowed = {src / "core" / "device.py", src / "core" / "mpi_sim.py"}
-    backend_names = ("LCIDevice", "ShmemComm", "ShmemDevice", "CollectiveComm", "MPISim")
-    for path in sorted(src.rglob("*.py")):
-        if comm_dir in path.parents or path in allowed:
-            continue
-        code_lines = [
-            line for line in path.read_text().splitlines()
-            if not line.lstrip().startswith("#")
-        ]
-        for line in code_lines:
-            if "isinstance(" in line and any(n in line for n in backend_names):
-                failures.append(
-                    f"{path.relative_to(REPO)}: isinstance() against a concrete "
-                    f"comm backend ({line.strip()!r}) — select the put path from "
-                    "capabilities.one_sided_put, not the backend type"
-                )
-        code = "\n".join(code_lines)
-        if ".post_put_signal(" in code and "one_sided_put" not in code:
-            failures.append(
-                f"{path.relative_to(REPO)}: posts one-sided puts without "
-                "consulting capabilities.one_sided_put — the put path must be "
-                "selected by the advertised Capabilities"
-            )
+    _run(failures, "gate-put-capability")
 
 
 def check_membership_thread_ownership(failures: list) -> None:
     """Gate 7: worker threads are spawned/joined only via the membership
-    nursery (``core/comm/membership.py``) so the lifecycle census stays
-    exact — no stray ``threading.Thread(`` beside it."""
-    src = REPO / "src" / "repro"
-    nursery = src / "core" / "comm" / "membership.py"
-    # the nursery itself owns the primitive; client load generators in
-    # launch/serve.py simulate external users, not tracked workers
-    exempt = {nursery, src / "launch" / "serve.py"}
-    for path in sorted(src.rglob("*.py")):
-        if path in exempt:
-            continue
-        for lineno, line in enumerate(path.read_text().splitlines(), 1):
-            if line.lstrip().startswith("#"):
-                continue
-            if "threading.Thread(" in line or "Thread(target=" in line:
-                failures.append(
-                    f"{path.relative_to(REPO)}:{lineno}: spawns a raw thread — "
-                    "worker lifecycle belongs to membership.spawn_worker / "
-                    "ProgressWorkerPool (the census must see every worker)"
-                )
-    # the two biggest thread consumers must actually ride the nursery
-    for rel, needle in (
-        ("core/executor.py", "spawn_worker"),
-        ("core/executor.py", "join_workers"),
-        ("core/lci_parcelport.py", "ProgressWorkerPool"),
-    ):
-        if needle not in (src / rel).read_text():
-            failures.append(
-                f"src/repro/{rel}: does not use membership.{needle} — "
-                "worker threads must go through the one nursery"
-            )
+    nursery — rebuilt on the call graph (alias-aware Thread resolution)."""
+    _run(failures, "gate-thread-nursery")
 
 
 def check_no_pickle_wire(failures: list) -> None:
     """Gate 8: wire-path modules carry the versioned binary format from
-    ``core/comm/wire.py`` — no pickle imports or calls (AST-based: a
-    docstring mentioning pickle is documentation, not a violation)."""
-    src = REPO / "src" / "repro"
-    wire_paths = (
-        [src / "train" / "grad_sync.py"]
-        + sorted((src / "core" / "comm").rglob("*.py"))
-        + sorted((src / "serve").rglob("*.py"))
-    )
-    for path in wire_paths:
-        try:
-            tree = ast.parse(path.read_text())
-        except SyntaxError as exc:  # pragma: no cover - tier-1 would fail first
-            failures.append(f"{path.relative_to(REPO)}: unparseable ({exc})")
-            continue
-        for node in ast.walk(tree):
-            if isinstance(node, ast.Import) and any(a.name.split(".")[0] == "pickle" for a in node.names):
-                offender = "import pickle"
-            elif isinstance(node, ast.ImportFrom) and (node.module or "").split(".")[0] == "pickle":
-                offender = "from pickle import"
-            elif isinstance(node, ast.Name) and node.id == "pickle":
-                offender = "pickle reference"
-            else:
-                continue
-            failures.append(
-                f"{path.relative_to(REPO)}:{node.lineno}: {offender} — wire-path "
-                "modules must use the versioned binary format in core/comm/wire.py "
-                "(encode_msg/decode_msg, grad headers), never pickle"
-            )
+    ``core/comm/wire.py`` — no pickle imports or calls (AST-based)."""
+    _run(failures, "gate-no-pickle-wire")
 
 
 def main() -> int:
